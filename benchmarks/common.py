@@ -1,0 +1,85 @@
+"""Shared benchmark scaffolding: paper interest expressions + scaled setup.
+
+The synthetic stream is a scaled-down DBpedia Live (paper §4): the full 2014
+dump (365M triples, 12k changesets over 15 days) does not fit a CPU-only
+container, so sizes scale down ~1000x while keeping the paper's *structure*:
+mixed-domain dump, two interests (Football: 4-pattern BGP with an
+object-subject join; Location: 5-pattern subject-star BGP + 1 OGP), and
+changesets dominated by uninteresting churn. Reported metrics are counts,
+selectivities (compare to the paper's 0.3-4.4%), and elapsed seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import InterestExpr, IrapEngine, StepCapacities
+from repro.data import DBpediaLikeGenerator, GeneratorConfig
+
+EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+FOOTBALL = InterestExpr.parse(
+    source="synthetic://dbpedia-live",
+    target="local://football",
+    bgp=[
+        ("?footballer", "rdf:type", "dbo:SoccerPlayer"),
+        ("?footballer", "foaf:name", "?name"),
+        ("?footballer", "dbo:team", "?team"),
+        ("?team", "rdfs:label", "?teamName"),
+    ],
+)
+
+LOCATION = InterestExpr.parse(
+    source="synthetic://dbpedia-live",
+    target="local://location",
+    bgp=[
+        ("?location", "rdf:type", "?type"),
+        ("?location", "wgs:long", "?long"),
+        ("?location", "wgs:lat", "?lat"),
+        ("?location", "rdfs:label", "?label"),
+        ("?location", "dbo:abstract", "?abstract"),
+    ],
+    ogp=[("?location", "dcterms:subject", "?subject")],
+)
+
+
+def default_generator(seed=0, scale=1.0) -> DBpediaLikeGenerator:
+    cfg = GeneratorConfig(
+        n_athletes=int(300 * scale),
+        n_places=int(500 * scale),
+        n_other=int(2500 * scale),
+        n_teams=50,
+        seed=seed,
+        adds_per_changeset=int(500 * scale),
+        removes_per_changeset=int(250 * scale),
+    )
+    return DBpediaLikeGenerator(cfg)
+
+
+def football_caps(scale=1.0, dedup=2048) -> StepCapacities:
+    # dedup=0 reproduces the paper-faithful naive probe pools (§Perf HC-C)
+    return StepCapacities(
+        n_removed=1024, n_added=2048, tau=1 << 15, rho=1 << 14,
+        pulls=1 << 14, fanout=8, dedup_candidates=dedup,
+    )
+
+
+def location_caps(scale=1.0, dedup=4096) -> StepCapacities:
+    return StepCapacities(
+        n_removed=1024, n_added=2048, tau=1 << 16, rho=1 << 15,
+        pulls=1 << 14, fanout=8, dedup_candidates=dedup,
+    )
+
+
+def save_json(name: str, payload) -> None:
+    EXP_DIR.mkdir(parents=True, exist_ok=True)
+    (EXP_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: sharded save/restore + elastic resharding."""
+from .store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

@@ -1,0 +1,61 @@
+"""iRap core: interest-based RDF update propagation, tensorized for TPU.
+
+Public API:
+  Dictionary, TripleStore + set algebra      (repro.core.{dictionary,triples})
+  InterestExpr / compile_interest            (repro.core.interest)
+  make_side_evaluator / TripleIndex          (repro.core.evaluation)
+  make_interest_step / IrapEngine            (repro.core.propagation)
+"""
+from .dictionary import Dictionary, parse_triples
+from .interest import CompiledInterest, InterestExpr, TriplePattern, compile_interest
+from .propagation import (
+    ChangesetStats,
+    EvalOutputs,
+    InterestSubscription,
+    IrapEngine,
+    StepCapacities,
+    make_interest_step,
+)
+from .triples import (
+    PAD,
+    WILDCARD,
+    TripleStore,
+    apply_changeset,
+    difference,
+    empty,
+    from_array,
+    from_numpy,
+    intersection,
+    member,
+    to_numpy,
+    to_set,
+    union,
+)
+
+__all__ = [
+    "Dictionary",
+    "parse_triples",
+    "CompiledInterest",
+    "InterestExpr",
+    "TriplePattern",
+    "compile_interest",
+    "ChangesetStats",
+    "EvalOutputs",
+    "InterestSubscription",
+    "IrapEngine",
+    "StepCapacities",
+    "make_interest_step",
+    "PAD",
+    "WILDCARD",
+    "TripleStore",
+    "apply_changeset",
+    "difference",
+    "empty",
+    "from_array",
+    "from_numpy",
+    "intersection",
+    "member",
+    "to_numpy",
+    "to_set",
+    "union",
+]

@@ -1,0 +1,218 @@
+"""Distributed interest evaluation: shard_map semijoin dataflow (DESIGN.md §3).
+
+The paper's §6 names a distributed pub/sub architecture as future work; this
+module builds it on jax-native collectives:
+
+  * the target dataset is hash-partitioned TWICE: the SPO index by subject id,
+    the OPS index by object id — so every bound-slot probe has exactly one
+    owner shard (the classic distributed-index layout);
+  * changeset shards evaluate locally; candidate-assertion probes whose
+    binding lives on another shard are ROUTED via ``jax.lax.all_to_all``
+    (MoE-style bucketed dispatch) and answered by the owner;
+  * signature tables / edge vectors are OR-all-reduced (they are binding-
+    indexed bitsets, so the collective volume is O(R x n_patterns) —
+    independent of changeset size);
+  * per-triple classification and output compaction stay fully local.
+
+The evaluator body is *shared* with the single-device path
+(``make_side_evaluator`` distribution hooks), so the semantics are identical
+by construction and asserted by the equivalence tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .evaluation import TripleIndex, SideResult, make_side_evaluator, probe
+from .interest import CompiledInterest
+from .triples import PAD, TripleStore, from_array, lex_sort
+
+
+# ---------------------------------------------------------------------------
+# host-side partitioning
+# ---------------------------------------------------------------------------
+
+def partition_rows(rows: np.ndarray, n_shards: int, key_col: int, cap: int) -> np.ndarray:
+    """(N, 3) -> (n_shards, cap, 3) hash-partitioned by ``rows[:, key_col]``."""
+    out = np.full((n_shards, cap, 3), PAD, np.int32)
+    if rows.size:
+        dest = rows[:, key_col] % n_shards
+        for s in range(n_shards):
+            mine = rows[dest == s]
+            if mine.shape[0] > cap:
+                raise ValueError(f"shard {s} overflows cap {cap}")
+            out[s, : mine.shape[0]] = mine
+    return out
+
+
+def prepare_target_shards(
+    tau: np.ndarray, n_shards: int, cap: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(SPO shards by subject, OPS shards by object) — both lex-sorted rows.
+
+    OPS shards store rows permuted to (o, p, s) so the shared prefix-range
+    probe machinery works unchanged.
+    """
+    spo = partition_rows(tau, n_shards, key_col=0, cap=cap)
+    ops_rows = tau[:, [2, 1, 0]] if tau.size else tau
+    ops = partition_rows(ops_rows, n_shards, key_col=0, cap=cap)
+    for s in range(n_shards):
+        spo[s] = spo[s][np.lexsort((spo[s][:, 2], spo[s][:, 1], spo[s][:, 0]))]
+        ops[s] = ops[s][np.lexsort((ops[s][:, 2], ops[s][:, 1], ops[s][:, 0]))]
+    return spo, ops
+
+
+# ---------------------------------------------------------------------------
+# in-graph primitives (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _bucketize(vals: jax.Array, n: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Group vals (B,) by dest = val % n into (n, B) buckets (PAD-padded).
+
+    Returns (buckets, dest, pos) so responses can be scattered back.
+    """
+    b = vals.shape[0]
+    live = vals != PAD
+    dest = jnp.where(live, vals % n, n)  # PAD -> dropped
+    onehot = jax.nn.one_hot(dest, n, dtype=jnp.int32)  # (B, n)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_of = jnp.sum(pos * onehot, axis=1)  # (B,)
+    buckets = jnp.full((n, b), PAD, jnp.int32)
+    buckets = buckets.at[dest, pos_of].set(vals, mode="drop")
+    return buckets, dest, pos_of
+
+
+def make_routed_probe(axis: str, n_shards: int) -> Callable:
+    """all_to_all probe: queries travel to the owner shard, answers return."""
+
+    def routed(index: TripleIndex, pattern, bound_slot, bound_vals, fanout):
+        b = bound_vals.shape[0]
+        buckets, dest, pos = _bucketize(bound_vals, n_shards)
+        # send: each shard receives one (B,) bucket from every peer
+        recv = jax.lax.all_to_all(buckets, axis, 0, 0)  # (n, B) queries for me
+        rows, valid = probe(
+            index, pattern, bound_slot, recv.reshape(-1), fanout
+        )
+        rows = rows.reshape(n_shards, b, fanout, 3)
+        valid = valid.reshape(n_shards, b, fanout)
+        # return: answers go back to the asking shard
+        rows_back = jax.lax.all_to_all(rows, axis, 0, 0)  # (n, B, K, 3)
+        valid_back = jax.lax.all_to_all(
+            valid.astype(jnp.int8), axis, 0, 0
+        ).astype(bool)
+        # un-bucketize: my query i was sent to shard dest[i] at slot pos[i]
+        my_rows = rows_back[dest.clip(0, n_shards - 1), pos]
+        my_valid = valid_back[dest.clip(0, n_shards - 1), pos] & (
+            bound_vals != PAD
+        )[:, None]
+        return my_rows, my_valid
+
+    return routed
+
+
+def make_or_reduce(axis: str) -> Callable:
+    def or_reduce(t: jax.Array) -> jax.Array:
+        return jax.lax.pmax(t.astype(jnp.uint8), axis).astype(bool)
+
+    return or_reduce
+
+
+def route_rows_by_key(rows: jax.Array, axis: str, n_shards: int, key_col: int = 0):
+    """Send each row to the shard owning ``row[key_col]`` (for Υ set algebra).
+
+    rows: (N, 3) local, PAD-padded. Returns (n * N, 3) rows now resident on
+    the owner shard (PAD-padded, unsorted).
+    """
+    n_rows = rows.shape[0]
+    key = rows[:, key_col]
+    buckets, dest, pos = _bucketize(key, n_shards)
+    full_buckets = jnp.full((n_shards, n_rows, 3), PAD, jnp.int32)
+    full_buckets = full_buckets.at[dest, pos].set(rows, mode="drop")
+    recv = jax.lax.all_to_all(full_buckets, axis, 0, 0)
+    return recv.reshape(-1, 3)
+
+
+# ---------------------------------------------------------------------------
+# the distributed side evaluator
+# ---------------------------------------------------------------------------
+
+def make_distributed_evaluator(
+    plan: CompiledInterest,
+    mesh,
+    *,
+    axis: str = "data",
+    id_capacity: int,
+    fanout: int = 4,
+    out_capacity: int,
+    pull_capacity: int,
+):
+    """shard_map side evaluator over hash-partitioned (M, τ) shards.
+
+    Inputs (global views):
+      m_shards:   int32[n, m_cap, 3]      changeset rows (any partitioning)
+      spo_shards: int32[n, t_cap, 3]      τ partitioned by subject, sorted
+      ops_shards: int32[n, t_cap, 3]      τ (o,p,s) partitioned by object
+    Returns per-shard SideResult stacked on the leading axis.
+    """
+    n_shards = int(mesh.shape[axis])
+    evaluator = make_side_evaluator(
+        plan,
+        id_capacity=id_capacity,
+        fanout=fanout,
+        out_capacity=out_capacity,
+        pull_capacity=pull_capacity,
+        probe_impl=make_routed_probe(axis, n_shards),
+        table_reduce=make_or_reduce(axis),
+    )
+
+    def shard_fn(m_rows, spo_rows, ops_rows):
+        m_store = TripleStore(
+            spo=lex_sort(m_rows[0]),
+            n=jnp.sum(m_rows[0, :, 0] != PAD, dtype=jnp.int32),
+        )
+        tgt = TripleIndex(
+            spo=TripleStore(
+                spo=spo_rows[0],
+                n=jnp.sum(spo_rows[0, :, 0] != PAD, dtype=jnp.int32),
+            ),
+            ops=TripleStore(
+                spo=ops_rows[0],
+                n=jnp.sum(ops_rows[0, :, 0] != PAD, dtype=jnp.int32),
+            ),
+        )
+        res = evaluator(m_store, tgt)
+        return jax.tree.map(lambda t: t[None], res)
+
+    spec = P(axis, None, None)
+    mapped = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=SideResult(
+            interesting=TripleStore(spo=P(axis, None, None), n=P(axis)),
+            potential=TripleStore(spo=P(axis, None, None), n=P(axis)),
+            pulls=TripleStore(spo=P(axis, None, None), n=P(axis)),
+            overflow=P(axis),
+        ),
+        check_vma=False,  # binary-search carries mix varying/unvarying axes
+    )
+    return jax.jit(mapped)
+
+
+def gather_result_sets(res: SideResult):
+    """Union the per-shard outputs into host-side sets (for tests/stats)."""
+    def rows_of(store_stacked):
+        arr = np.asarray(store_stacked.spo).reshape(-1, 3)
+        return {tuple(int(x) for x in r) for r in arr if r[0] != PAD}
+
+    return (
+        rows_of(res.interesting),
+        rows_of(res.potential),
+        rows_of(res.pulls),
+    )

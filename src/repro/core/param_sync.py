@@ -1,0 +1,87 @@
+"""Beyond-paper: interest-based update propagation for the MODEL plane.
+
+DESIGN.md §Arch-applicability: the paper's mechanism is data-plane, but the
+same subscribe/filter/propagate split applies to sparsely-updated parameter
+banks — MoE expert blocks and embedding rows. A trainer publishes per-step
+*parameter changesets* (row indices + new values for rows whose update
+exceeded a threshold); each serving replica registers a row-set interest
+(the experts it hosts, its hot vocab rows) and applies only the interesting
+slice — the iRap split of interesting / uninteresting applied to weights.
+
+For dense (non-row-sparse) banks this degenerates to full mirroring, which
+the API makes explicit (``interest=None``). Wire format mirrors the RDF
+changeset: ⟨removed, added⟩ becomes ⟨rows, values⟩ (updates are total per
+row, so no remove side is needed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamChangeset:
+    """Row-sparse update to one parameter bank (rows indexed on axis 0)."""
+
+    bank: str
+    rows: jax.Array  # int32[K] row indices (PAD-free)
+    values: jax.Array  # [K, ...] new row contents
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.values.size * self.values.dtype.itemsize
+                   + self.rows.size * 4)
+
+
+def diff_bank(
+    bank: str, old: jax.Array, new: jax.Array, *, atol: float = 0.0
+) -> ParamChangeset:
+    """Publish the rows of ``new`` that changed (per-row max-abs > atol)."""
+    flat_old = old.reshape(old.shape[0], -1)
+    flat_new = new.reshape(new.shape[0], -1)
+    changed = jnp.max(jnp.abs(flat_new - flat_old), axis=1) > atol
+    idx = jnp.nonzero(changed)[0].astype(jnp.int32)  # host-side sync point
+    return ParamChangeset(bank=bank, rows=idx, values=new[idx])
+
+
+def filter_changeset(
+    cs: ParamChangeset, interest_rows: Optional[jax.Array]
+) -> ParamChangeset:
+    """Keep only rows the replica subscribed to (None = mirror everything)."""
+    if interest_rows is None:
+        return cs
+    member = jnp.isin(cs.rows, interest_rows)
+    keep = jnp.nonzero(member)[0]
+    return ParamChangeset(bank=cs.bank, rows=cs.rows[keep], values=cs.values[keep])
+
+
+def apply_changeset(bank_value: jax.Array, cs: ParamChangeset) -> jax.Array:
+    return bank_value.at[cs.rows].set(cs.values)
+
+
+class ParamReplica:
+    """A serving replica holding interest-filtered parameter banks."""
+
+    def __init__(
+        self,
+        banks: Dict[str, jax.Array],
+        interests: Dict[str, Optional[jax.Array]],
+    ):
+        self.banks = dict(banks)
+        self.interests = interests
+        self.bytes_received = 0
+        self.bytes_offered = 0
+
+    def receive(self, cs: ParamChangeset) -> None:
+        self.bytes_offered += cs.nbytes
+        mine = filter_changeset(cs, self.interests.get(cs.bank))
+        self.bytes_received += mine.nbytes
+        self.banks[cs.bank] = apply_changeset(self.banks[cs.bank], mine)
+
+    @property
+    def savings(self) -> float:
+        return 1.0 - self.bytes_received / max(self.bytes_offered, 1)

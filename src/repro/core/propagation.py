@@ -1,0 +1,281 @@
+"""Interest evaluation combination and update propagation (Defs 6, 13-18).
+
+``make_interest_step`` builds the fully jitted per-changeset step for one
+interest expression:
+
+    d(i, D)        -> <r, r_i, r'>          (Def 13, over deleted triples)
+    α(i, A ∪ ρ)    -> <a, a_i, a'>          (Def 14, over added ∪ potential)
+    Δ(τ) = <r ∪ r', a>                      (Def 16)
+    Δ(ρ) = <r_i, a_i ∪ r'>                  (Def 17)
+    Υ: τ' = (τ \\ (r ∪ r')) ∪ a             (Def 18)
+       ρ' = ((ρ \\ r_i) ∪ a_i ∪ r') \\ a    (Def 17 + promotion fix, DESIGN §1)
+
+The host-side :class:`IrapEngine` owns the capacities, re-jits on overflow
+(store growth) or dictionary growth, and exposes per-changeset statistics —
+the production control loop around the pure functional core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dictionary import Dictionary
+from .evaluation import SideResult, TripleIndex, build_index, make_side_evaluator
+from .interest import CompiledInterest, InterestExpr, compile_interest
+from .triples import PAD, TripleStore, difference, empty, from_array, union
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["r", "r_i", "r_prime", "a", "a_i", "overflow"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class EvalOutputs:
+    """The named sets of Definitions 13-17 for one changeset."""
+
+    r: TripleStore  # interesting removed
+    r_i: TripleStore  # potentially interesting removed
+    r_prime: TripleStore  # τ triples that become potentially interesting
+    a: TripleStore  # interesting added (incl. τ completions)
+    a_i: TripleStore  # potentially interesting added
+    overflow: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCapacities:
+    n_removed: int = 1024  # D capacity
+    n_added: int = 1024  # A capacity
+    tau: int = 4096
+    rho: int = 4096
+    pulls: int = 2048
+    fanout: int = 4
+    # §Perf HC-C: candidate-dedup probe pool cap (0 = paper-faithful naive)
+    dedup_candidates: int = 0
+    # re-jit headroom: signature tables sized to headroom x dictionary size
+    id_headroom: int = 4
+
+    @property
+    def n_i(self) -> int:  # I = A ∪ ρ
+        return self.n_added + self.rho
+
+    def doubled(self) -> "StepCapacities":
+        return dataclasses.replace(
+            self,
+            n_removed=self.n_removed * 2,
+            n_added=self.n_added * 2,
+            tau=self.tau * 2,
+            rho=self.rho * 2,
+            pulls=self.pulls * 2,
+            dedup_candidates=self.dedup_candidates * 2,
+        )
+
+
+def make_interest_step(
+    plan: CompiledInterest,
+    *,
+    id_capacity: int,
+    caps: StepCapacities,
+    matcher=None,
+) -> Callable:
+    """Jitted (D, A, τ, ρ) -> (τ', ρ', EvalOutputs) for one interest."""
+    eval_d = make_side_evaluator(
+        plan,
+        id_capacity=id_capacity,
+        fanout=caps.fanout,
+        out_capacity=caps.n_removed,
+        pull_capacity=caps.pulls,
+        matcher=matcher,
+        dedup_candidates=caps.dedup_candidates,
+    )
+    eval_a = make_side_evaluator(
+        plan,
+        id_capacity=id_capacity,
+        fanout=caps.fanout,
+        out_capacity=caps.n_i,
+        pull_capacity=caps.pulls,
+        matcher=matcher,
+        dedup_candidates=caps.dedup_candidates,
+    )
+    a_cap = caps.n_i + caps.pulls
+
+    @jax.jit
+    def step(
+        d_set: TripleStore,
+        a_set: TripleStore,
+        tau: TripleStore,
+        rho: TripleStore,
+    ):
+        tgt = build_index(tau)
+        d_res = eval_d(d_set, tgt)
+        i_set, ovf_i = union(a_set, rho, caps.n_i)
+        a_res = eval_a(i_set, tgt)
+
+        r, r_i, r_prime = d_res.interesting, d_res.potential, d_res.pulls
+        a, ovf_a = union(a_res.interesting, a_res.pulls, a_cap)
+        a_i = a_res.potential
+
+        # Υ (Def 18): target first removes r ∪ r', then adds a
+        tau1 = difference(difference(tau, r), r_prime)
+        tau1, ovf_t = union(tau1, a, caps.tau)
+
+        # ρ' = ((ρ \ r_i) ∪ a_i ∪ r') \ a   (promotion fix)
+        rho1 = difference(rho, r_i)
+        rho1, ovf_r1 = union(rho1, a_i, caps.rho)
+        rho1, ovf_r2 = union(rho1, r_prime, caps.rho)
+        rho1 = difference(rho1, a)
+
+        overflow = (
+            d_res.overflow
+            | a_res.overflow
+            | ovf_i
+            | ovf_a
+            | ovf_t
+            | ovf_r1
+            | ovf_r2
+        )
+        out = EvalOutputs(
+            r=r, r_i=r_i, r_prime=r_prime, a=a, a_i=a_i, overflow=overflow
+        )
+        return tau1, rho1, out
+
+    return step
+
+
+@dataclasses.dataclass
+class ChangesetStats:
+    changeset_id: int
+    total_removed: int
+    total_added: int
+    interesting_removed: int
+    interesting_added: int
+    potential_size: int
+    target_size: int
+    elapsed_s: float
+
+
+class InterestSubscription:
+    """One registered interest: its plan, τ, ρ, and jitted step."""
+
+    def __init__(
+        self,
+        expr: InterestExpr,
+        dictionary: Dictionary,
+        caps: StepCapacities,
+        matcher=None,
+    ):
+        self.expr = expr
+        self.dictionary = dictionary
+        self.caps = caps
+        self.matcher = matcher
+        self.plan = compile_interest(expr, dictionary)
+        self.id_capacity = dictionary.id_capacity * caps.id_headroom
+        self.tau = empty(caps.tau)
+        self.rho = empty(caps.rho)
+        self._step = make_interest_step(
+            self.plan, id_capacity=self.id_capacity, caps=caps, matcher=matcher
+        )
+
+    def _rebuild(self, caps: StepCapacities | None = None):
+        if caps is not None:
+            self.caps = caps
+        # recompile plan so late-registered dictionary constants resolve
+        self.plan = compile_interest(self.expr, self.dictionary)
+        self.id_capacity = self.dictionary.id_capacity * self.caps.id_headroom
+        self._step = make_interest_step(
+            self.plan,
+            id_capacity=self.id_capacity,
+            caps=self.caps,
+            matcher=self.matcher,
+        )
+        # re-home stores into (possibly) larger capacities
+        self.tau, _ = union(empty(self.caps.tau), self.tau, self.caps.tau)
+        self.rho, _ = union(empty(self.caps.rho), self.rho, self.caps.rho)
+
+    def init_target(self, triples: np.ndarray):
+        """Load the initial RDFSlice-style subset into τ (paper §2)."""
+        while True:
+            store, overflow = from_array(
+                jnp.asarray(triples, jnp.int32), self.caps.tau
+            )
+            if not bool(overflow):
+                self.tau = store
+                return
+            self._rebuild(self.caps.doubled())
+
+    def apply(self, d_np: np.ndarray, a_np: np.ndarray) -> EvalOutputs:
+        if self.dictionary.id_capacity > self.id_capacity:
+            self._rebuild()
+        while True:
+            caps = self.caps
+            if d_np.shape[0] > caps.n_removed or a_np.shape[0] > caps.n_added:
+                self._rebuild(caps.doubled())
+                continue
+            d_store, _ = from_array(jnp.asarray(d_np, jnp.int32), caps.n_removed)
+            a_store, _ = from_array(jnp.asarray(a_np, jnp.int32), caps.n_added)
+            tau1, rho1, out = self._step(d_store, a_store, self.tau, self.rho)
+            if bool(out.overflow):
+                self._rebuild(caps.doubled())
+                continue
+            self.tau, self.rho = tau1, rho1
+            return out
+
+
+class IrapEngine:
+    """Host orchestrator: Interest Manager + Changeset Manager + Evaluator.
+
+    Mirrors the iRap architecture (paper §3): interests are registered, then
+    changesets stream through ``process_changeset`` and every subscription's
+    τ / ρ stores are updated; per-changeset stats are collected.
+    """
+
+    def __init__(self, dictionary: Dictionary | None = None):
+        # NB: `dictionary or Dictionary()` would discard an *empty* dict
+        # (Dictionary defines __len__), silently splitting the id space.
+        self.dictionary = dictionary if dictionary is not None else Dictionary()
+        self.subs: List[InterestSubscription] = []
+        self.stats: List[ChangesetStats] = []
+        self._counter = 0
+
+    def register_interest(
+        self,
+        expr: InterestExpr,
+        caps: StepCapacities = StepCapacities(),
+        initial_target: np.ndarray | None = None,
+        matcher=None,
+    ) -> InterestSubscription:
+        sub = InterestSubscription(expr, self.dictionary, caps, matcher=matcher)
+        if initial_target is not None and initial_target.size:
+            sub.init_target(initial_target)
+        self.subs.append(sub)
+        return sub
+
+    def process_changeset(
+        self, removed: np.ndarray, added: np.ndarray
+    ) -> List[ChangesetStats]:
+        self._counter += 1
+        out_stats = []
+        for sub in self.subs:
+            t0 = time.perf_counter()
+            out = sub.apply(removed, added)
+            jax.block_until_ready(sub.tau.spo)
+            elapsed = time.perf_counter() - t0
+            st = ChangesetStats(
+                changeset_id=self._counter,
+                total_removed=int(removed.shape[0]),
+                total_added=int(added.shape[0]),
+                interesting_removed=int(out.r.n),
+                interesting_added=int(out.a.n),
+                potential_size=int(sub.rho.n),
+                target_size=int(sub.tau.n),
+                elapsed_s=elapsed,
+            )
+            out_stats.append(st)
+            self.stats.append(st)
+        return out_stats

@@ -1,0 +1,249 @@
+"""Columnar, fixed-capacity RDF triple-set algebra.
+
+The TPU-native replacement for Jena's B-tree triple indexes: a triple store is
+a lexicographically sorted ``int32[C, 3]`` array (subject, predicate, object
+ids) padded at the tail with ``PAD`` sentinel rows plus a valid-count scalar.
+Every operation is fixed-shape and jit-friendly; overflow is reported through
+flags so the host runtime can grow a store between steps.
+
+Triple ids produced by :mod:`repro.core.dictionary` are dense and >= 0, so
+``PAD = 2**31 - 1`` sorts strictly after every valid row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = np.int32(np.iinfo(np.int32).max)
+WILDCARD = np.int32(-1)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["spo", "n"], meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class TripleStore:
+    """A sorted, deduplicated, fixed-capacity set of RDF triples."""
+
+    spo: jax.Array  # int32[C, 3], lex-sorted, PAD rows at the tail
+    n: jax.Array  # int32[] number of valid rows
+
+    @property
+    def capacity(self) -> int:
+        return self.spo.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return self.spo[:, 0] != PAD
+
+
+def empty(capacity: int) -> TripleStore:
+    return TripleStore(
+        spo=jnp.full((capacity, 3), PAD, dtype=jnp.int32),
+        n=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# lexicographic helpers (columnar int32 — avoids a global x64 flip)
+# ---------------------------------------------------------------------------
+
+def lex_less(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-wise (s, p, o) < comparison; broadcasts over leading dims."""
+    s_lt = a[..., 0] < b[..., 0]
+    s_eq = a[..., 0] == b[..., 0]
+    p_lt = a[..., 1] < b[..., 1]
+    p_eq = a[..., 1] == b[..., 1]
+    o_lt = a[..., 2] < b[..., 2]
+    return s_lt | (s_eq & (p_lt | (p_eq & o_lt)))
+
+
+def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.all(a == b, axis=-1)
+
+
+def lex_sort(spo: jax.Array) -> jax.Array:
+    """Return ``spo`` sorted lexicographically by (s, p, o)."""
+    perm = jnp.lexsort((spo[:, 2], spo[:, 1], spo[:, 0]))
+    return spo[perm]
+
+
+def _dedup_sorted_mask(spo: jax.Array) -> jax.Array:
+    """Keep-mask for the first occurrence of each row in a sorted array."""
+    prev = jnp.roll(spo, 1, axis=0)
+    first = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), ~rows_equal(spo[1:], prev[1:])]
+    )
+    return first & (spo[:, 0] != PAD)
+
+
+def compact(spo: jax.Array, keep: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Stable-partition kept rows to the front; pad the rest. Returns (rows, count)."""
+    order = jnp.argsort(jnp.logical_not(keep), stable=True)
+    rows = spo[order]
+    count = jnp.sum(keep, dtype=jnp.int32)
+    idx = jnp.arange(spo.shape[0], dtype=jnp.int32)
+    rows = jnp.where((idx < count)[:, None], rows, jnp.full_like(rows, PAD))
+    return rows, count
+
+
+def from_array(spo: jax.Array, capacity: int) -> Tuple[TripleStore, jax.Array]:
+    """Build a store from an unsorted (possibly duplicated) triple array.
+
+    Returns (store, overflowed) — ``overflowed`` is True when the distinct
+    triples exceed ``capacity`` (the store then holds the first ``capacity``).
+    """
+    spo = jnp.asarray(spo, dtype=jnp.int32)
+    if spo.ndim != 2 or spo.shape[1] != 3:
+        raise ValueError(f"expected (N, 3) triples, got {spo.shape}")
+    srt = lex_sort(spo)
+    keep = _dedup_sorted_mask(srt)
+    rows, count = compact(srt, keep)
+    c = rows.shape[0]
+    if c < capacity:
+        rows = jnp.concatenate(
+            [rows, jnp.full((capacity - c, 3), PAD, dtype=jnp.int32)], axis=0
+        )
+    elif c > capacity:
+        rows = rows[:capacity]
+    overflow = count > capacity
+    return TripleStore(spo=rows, n=jnp.minimum(count, capacity)), overflow
+
+
+def from_numpy(triples: np.ndarray, capacity: int) -> TripleStore:
+    store, overflow = from_array(jnp.asarray(triples, dtype=jnp.int32), capacity)
+    if bool(overflow):
+        raise ValueError(
+            f"{triples.shape[0]} distinct triples exceed capacity {capacity}"
+        )
+    return store
+
+
+# ---------------------------------------------------------------------------
+# binary search over sorted rows
+# ---------------------------------------------------------------------------
+
+def searchsorted_rows(sorted_spo: jax.Array, queries: jax.Array, side: str = "left") -> jax.Array:
+    """Vectorized lexicographic searchsorted. ``queries``: int32[Q, 3]."""
+    c = sorted_spo.shape[0]
+    q = queries.shape[0]
+    lo = jnp.zeros((q,), dtype=jnp.int32)
+    hi = jnp.full((q,), c, dtype=jnp.int32)
+    iters = max(1, int(np.ceil(np.log2(c + 1))) + 1)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        row = jnp.take(sorted_spo, jnp.minimum(mid, c - 1), axis=0)
+        if side == "left":
+            go_right = lex_less(row, queries)
+        else:
+            go_right = ~lex_less(queries, row)
+        active = lo < hi
+        new_lo = jnp.where(active & go_right, mid + 1, lo)
+        new_hi = jnp.where(active & ~go_right, mid, hi)
+        return new_lo, new_hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def member(store: TripleStore, queries: jax.Array) -> jax.Array:
+    """Boolean membership of each query row in the store."""
+    c = store.capacity
+    idx = searchsorted_rows(store.spo, queries, side="left")
+    rows = jnp.take(store.spo, jnp.minimum(idx, c - 1), axis=0)
+    return (idx < c) & rows_equal(rows, queries)
+
+
+def prefix_range(store: TripleStore, prefix: jax.Array, depth: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[start, end) of rows matching the first ``depth`` columns of ``prefix``.
+
+    ``prefix``: int32[Q, 3] (columns past ``depth`` ignored); ``depth``:
+    int32[Q] in {1, 2, 3}. Works on any store sorted in the column order the
+    prefix refers to.
+    """
+    neg = jnp.int32(np.iinfo(np.int32).min)
+    col = jnp.arange(3, dtype=jnp.int32)[None, :]
+    lo_q = jnp.where(col < depth[:, None], prefix, neg)
+    hi_q = jnp.where(col < depth[:, None], prefix, PAD)
+    start = searchsorted_rows(store.spo, lo_q, side="left")
+    end = searchsorted_rows(store.spo, hi_q, side="right")
+    return start, end
+
+
+# ---------------------------------------------------------------------------
+# set algebra
+# ---------------------------------------------------------------------------
+
+def difference(a: TripleStore, b: TripleStore) -> TripleStore:
+    """a \\ b, keeping a's capacity."""
+    in_b = member(b, a.spo)
+    keep = a.valid_mask() & ~in_b
+    rows, count = compact(a.spo, keep)
+    return TripleStore(spo=rows, n=count)
+
+
+def intersection(a: TripleStore, b: TripleStore) -> TripleStore:
+    in_b = member(b, a.spo)
+    keep = a.valid_mask() & in_b
+    rows, count = compact(a.spo, keep)
+    return TripleStore(spo=rows, n=count)
+
+
+def union(a: TripleStore, b: TripleStore, capacity: int | None = None) -> Tuple[TripleStore, jax.Array]:
+    """a ∪ b with the given output capacity (defaults to a's). Returns (store, overflowed)."""
+    capacity = a.capacity if capacity is None else capacity
+    both = jnp.concatenate([a.spo, b.spo], axis=0)
+    srt = lex_sort(both)
+    keep = _dedup_sorted_mask(srt)
+    rows, count = compact(srt, keep)
+    overflow = count > capacity
+    if rows.shape[0] < capacity:
+        rows = jnp.concatenate(
+            [rows, jnp.full((capacity - rows.shape[0], 3), PAD, dtype=jnp.int32)],
+            axis=0,
+        )
+    else:
+        rows = rows[:capacity]
+    return TripleStore(spo=rows, n=jnp.minimum(count, capacity)), overflow
+
+
+def apply_changeset(store: TripleStore, removed: TripleStore, added: TripleStore) -> Tuple[TripleStore, jax.Array]:
+    """υ(V, Δ) = (V \\ D) ∪ A  — Definition 6 (delete-first ordering)."""
+    without = difference(store, removed)
+    return union(without, added, store.capacity)
+
+
+def to_numpy(store: TripleStore) -> np.ndarray:
+    spo = np.asarray(store.spo)
+    return spo[spo[:, 0] != PAD]
+
+
+def to_set(store: TripleStore) -> set:
+    return {tuple(int(x) for x in row) for row in to_numpy(store)}
+
+
+# ---------------------------------------------------------------------------
+# pattern matching (XLA path; the Pallas kernel lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def match_bitmask(spo: jax.Array, patterns: jax.Array) -> jax.Array:
+    """uint32[N] bitset: bit j set iff row matches patterns[j] (-1 = wildcard).
+
+    Padding rows (s == PAD) match nothing.
+    """
+    n_pat = patterns.shape[0]
+    if n_pat > 32:
+        raise ValueError("at most 32 patterns per bitset")
+    valid = spo[:, 0] != PAD
+    acc = jnp.zeros(spo.shape[0], dtype=jnp.uint32)
+    for j in range(n_pat):
+        pat = patterns[j]
+        m = valid
+        for k in range(3):
+            m = m & ((pat[k] == WILDCARD) | (spo[:, k] == pat[k]))
+        acc = acc | (m.astype(jnp.uint32) << j)
+    return acc

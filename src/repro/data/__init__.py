@@ -1,0 +1,11 @@
+"""Data plane: synthetic DBpedia-Live-like streams, verbalizer, batching."""
+from .changeset_gen import DBpediaLikeGenerator, GeneratorConfig
+from .pipeline import ReplicaTokenPipeline
+from .verbalizer import Verbalizer
+
+__all__ = [
+    "DBpediaLikeGenerator",
+    "GeneratorConfig",
+    "ReplicaTokenPipeline",
+    "Verbalizer",
+]

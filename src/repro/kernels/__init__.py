@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the iRap hot spots + XLA fallbacks.
+
+Kernels (each: <name>.py kernel + ops.py wrapper + ref.py oracle):
+  * triple_match — fused multi-pattern triple matching (uint32 bitset emit)
+  * merge_join   — blocked sort-merge membership probe (candidate assertion)
+"""
+from . import merge_join, ops, ref, triple_match  # noqa: F401

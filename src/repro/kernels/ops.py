@@ -1,0 +1,120 @@
+"""Public jit'd wrappers around the Pallas kernels with XLA fallbacks.
+
+On non-TPU backends Pallas runs in interpret mode (Python, slow) — correct
+but not fast — so the default execution path off-TPU is the pure-XLA
+reference; the kernels remain the TPU target and are exercised by the test
+suite in interpret mode against the oracles in :mod:`repro.kernels.ref`.
+
+Set ``repro.kernels.ops.FORCE_KERNEL = True`` (or pass ``use_kernel=True``)
+to route through the Pallas implementations everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import merge_join, ref, triple_match
+
+PAD = ref.PAD
+FORCE_KERNEL = False
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _want_kernel(use_kernel: bool | None) -> bool:
+    if use_kernel is None:
+        return FORCE_KERNEL or _on_tpu()
+    return use_kernel
+
+
+def pattern_bitmask(spo: jax.Array, patterns: jax.Array, *, use_kernel: bool | None = None) -> jax.Array:
+    """uint32[N] bitset of pattern matches per triple row."""
+    if not _want_kernel(use_kernel):
+        return ref.pattern_bitmask_ref(spo, patterns)
+    tile = 128 * triple_match.BLOCK_ROWS
+    n = spo.shape[0]
+    n_pad = -n % tile
+    if n_pad:
+        spo = jnp.concatenate(
+            [spo, jnp.full((n_pad, 3), PAD, dtype=jnp.int32)], axis=0
+        )
+    out = triple_match.triple_match_pallas(
+        spo, patterns, interpret=not _on_tpu()
+    )
+    return out[:n]
+
+
+def merge_probe(
+    store: jax.Array,
+    queries: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    windowed: bool = False,
+):
+    """(idx, found) of each query row in a lex-sorted store (original order).
+
+    ``store``: int32[S, 3] lex-sorted with PAD tail. ``queries``: int32[Q, 3]
+    any order. ``found`` is bool[Q]; ``idx`` is the searchsorted-left position.
+
+    The kernel path requires every sorted-query block's covering store window
+    to fit STORE_BLOCK rows; when that precondition fails (measured host-side
+    in eager mode) the call transparently falls back to the XLA path.
+    """
+    if not _want_kernel(use_kernel):
+        return ref.merge_probe_ref(store, queries)
+
+    qb, sb = merge_join.QUERY_BLOCK, merge_join.STORE_BLOCK
+    q = queries.shape[0]
+    s = store.shape[0]
+
+    # sort queries, pad to block multiples
+    perm = jnp.lexsort((queries[:, 2], queries[:, 1], queries[:, 0]))
+    qs = queries[perm]
+    q_pad = -q % qb
+    if q_pad:
+        qs = jnp.concatenate([qs, jnp.full((q_pad, 3), PAD, jnp.int32)], axis=0)
+    s_pad = -s % sb
+    store_p = store
+    if s_pad:
+        store_p = jnp.concatenate(
+            [store, jnp.full((s_pad, 3), PAD, jnp.int32)], axis=0
+        )
+    sp_len = store_p.shape[0]
+    g = qs.shape[0] // qb
+
+    # covering window per query block: position of its first/last query
+    firsts = qs[0::qb]
+    lasts = qs[qb - 1 :: qb]
+    start, _ = ref.merge_probe_ref(store_p, firsts)
+    end, _ = ref.merge_probe_ref(store_p, lasts)
+    end = jnp.minimum(end + 1, sp_len)
+    win_blk = start // sb
+    fits = jnp.all(end <= (win_blk + 1) * sb)
+
+    if not jax.core.is_concrete(fits):
+        # inside a jit trace we cannot branch on the skew check
+        return ref.merge_probe_ref(store, queries)
+    if not bool(fits) or sp_len < sb:
+        return ref.merge_probe_ref(store, queries)
+
+    if windowed:
+        idx_s, found_s = merge_join.merge_probe_windowed(
+            store_p, win_blk.astype(jnp.int32), qs, interpret=not _on_tpu()
+        )
+    else:
+        starts = (win_blk * sb).astype(jnp.int32)
+        gather = jax.vmap(
+            lambda st: jax.lax.dynamic_slice(store_p, (st, 0), (sb, 3))
+        )
+        windows = gather(starts)
+        idx_s, found_s = merge_join.merge_probe_pallas(
+            windows, starts, qs, interpret=not _on_tpu()
+        )
+
+    idx_s = idx_s[:q]
+    found_s = found_s[:q].astype(bool)
+    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(q))
+    return idx_s[inv], found_s[inv]

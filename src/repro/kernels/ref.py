@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = np.int32(np.iinfo(np.int32).max)
+WILDCARD = np.int32(-1)
+
+
+def pattern_bitmask_ref(spo: jax.Array, patterns: jax.Array) -> jax.Array:
+    """uint32[N] bitset: bit j set iff row i matches patterns[j].
+
+    ``patterns``: int32[P, 3] with -1 as wildcard. PAD rows match nothing.
+    """
+    n_pat = patterns.shape[0]
+    valid = spo[:, 0] != PAD
+    acc = jnp.zeros(spo.shape[0], dtype=jnp.uint32)
+    for j in range(n_pat):
+        pat = patterns[j]
+        m = valid
+        for k in range(3):
+            m = m & ((pat[k] == WILDCARD) | (spo[:, k] == pat[k]))
+        acc = acc | (m.astype(jnp.uint32) << j)
+    return acc
+
+
+def _lex_less(a: jax.Array, b: jax.Array) -> jax.Array:
+    s_lt = a[..., 0] < b[..., 0]
+    s_eq = a[..., 0] == b[..., 0]
+    p_lt = a[..., 1] < b[..., 1]
+    p_eq = a[..., 1] == b[..., 1]
+    o_lt = a[..., 2] < b[..., 2]
+    return s_lt | (s_eq & (p_lt | (p_eq & o_lt)))
+
+
+def merge_probe_ref(store: jax.Array, queries: jax.Array):
+    """Lexicographic searchsorted-left + membership of queries in a sorted store.
+
+    Returns (idx int32[Q], found bool[Q]). ``store``: int32[S, 3] lex-sorted
+    with PAD tail; ``queries``: int32[Q, 3] (any order).
+    """
+    c = store.shape[0]
+    q = queries.shape[0]
+    lo = jnp.zeros((q,), dtype=jnp.int32)
+    hi = jnp.full((q,), c, dtype=jnp.int32)
+    iters = max(1, int(np.ceil(np.log2(c + 1))) + 1)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        row = jnp.take(store, jnp.minimum(mid, c - 1), axis=0)
+        go_right = _lex_less(row, queries)
+        active = lo < hi
+        return (
+            jnp.where(active & go_right, mid + 1, lo),
+            jnp.where(active & ~go_right, mid, hi),
+        )
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    rows = jnp.take(store, jnp.minimum(lo, c - 1), axis=0)
+    found = (lo < c) & jnp.all(rows == queries, axis=-1)
+    return lo, found

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, sharding plans, dry-run, drivers."""

@@ -1,0 +1,362 @@
+# The dry-run (and ONLY the dry-run) builds the production mesh from 512
+# placeholder host devices; jax locks the device count at first init, so this
+# must precede every other import — including `from repro...`.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the full-size model + sharding plan,
+  2. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(**ShapeDtypeStructs)``,
+  3. ``lowered.compile()``  — proving the distribution config is coherent,
+  4. records ``compiled.memory_analysis()`` / ``cost_analysis()`` and the
+     collective bytes parsed from the HLO (all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute operand sizes),
+  5. derives the three roofline terms (EXPERIMENTS.md §Roofline) and writes
+     one JSON per cell under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import sharding as sh
+from repro.launch.hlo import collective_bytes, parse_memory_analysis
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    n_chips,
+)
+from repro.launch.steps import (
+    abstract_cache,
+    abstract_state,
+    batch_struct,
+    decode_inputs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import build_model, cells_for
+from repro.models.config import SHAPES
+from repro.optim import AdamW
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _lower(cfg, cell, mesh, plan: str):
+    """Build model + sharding plan and lower one step program."""
+    from repro.models import layers as mlayers
+
+    api = build_model(cfg)
+    jax.set_mesh(mesh)
+    mlayers.ACT_RULES = sh.activation_rules(cfg, cell, mesh, plan)
+    try:
+        return _lower_inner(cfg, cell, mesh, plan, api)
+    finally:
+        mlayers.ACT_RULES = {}
+
+
+def _lower_inner(cfg, cell, mesh, plan, api):
+    if cell.kind == "train":
+        opt = AdamW(learning_rate=3e-4, weight_decay=0.1, max_grad_norm=1.0)
+        params_s, opt_s = abstract_state(api, opt)
+        batch_s = batch_struct(cfg, cell)
+        p_spec = sh.param_specs(cfg, mesh, params_s, plan)
+        o_spec = sh.opt_specs(p_spec)
+        b_spec = sh.batch_specs(cfg, cell, mesh)
+        step = make_train_step(api, opt)
+        metric_spec = {
+            "loss": P(), "grad_norm": P(), "xent": P(), "aux": P(),
+        }
+        if cfg.family not in ("dense", "moe"):
+            metric_spec = {"loss": P(), "grad_norm": P(), "xent": P()}
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_spec, o_spec, b_spec),
+            out_shardings=(p_spec, o_spec, metric_spec),
+        ).lower(params_s, opt_s, batch_s)
+    elif cell.kind == "prefill":
+        params_s, _ = abstract_state(api, None)
+        batch_s = batch_struct(cfg, cell)
+        p_spec = sh.param_specs(cfg, mesh, params_s, plan, serve=True)
+        b_spec = sh.batch_specs(cfg, cell, mesh)
+        cache_s = abstract_cache(api, cell)
+        c_spec = sh.cache_specs(cfg, cell, mesh, cache_s, plan)
+        step = make_prefill_step(api, max_seq=cell.seq_len)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_spec, b_spec),
+            out_shardings=(P(), c_spec),
+        ).lower(params_s, batch_s)
+    else:  # decode
+        params_s, _ = abstract_state(api, None)
+        p_spec = sh.param_specs(cfg, mesh, params_s, plan, serve=True)
+        cache_s = abstract_cache(api, cell)
+        c_spec = sh.cache_specs(cfg, cell, mesh, cache_s, plan)
+        tok_s, pos_s = decode_inputs(cfg, cell)
+        tok_spec = sh.decode_token_spec(cell, mesh)
+        step = make_decode_step(api)
+        donate = (1,) if plan == "opt" else ()  # §Perf: in-place cache update
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_spec, c_spec, tok_spec, P()),
+            out_shardings=(P(), c_spec),
+            donate_argnums=donate,
+        ).lower(params_s, cache_s, tok_s, pos_s)
+    return lowered
+
+
+def _compile_costs(cfg, cell, mesh, plan):
+    """(flops, bytes, collective_bytes) per device for one lowered program."""
+    compiled = _lower(cfg, cell, mesh, plan).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total_bytes"],
+        "coll_by_op": coll["by_op"],
+    }
+
+
+def probe_cfgs(cfg):
+    """(full_group_count, cfg_for_groups(g)) for exact-count probe compiles.
+
+    Probes unroll every layer scan and use single-trip / associative seq
+    scans so XLA cost analysis sees every iteration; full-model cost is
+    recovered as f(1) + (G-1) * (f(2) - f(1)) — linear because probe g and
+    g+1 differ by exactly one structural group.
+    """
+    import dataclasses as dc
+
+    fam = cfg.family
+    if fam == "encdec":
+        g_full = cfg.n_layers
+        mk = lambda g: dc.replace(cfg, n_layers=g, n_enc_layers=g)
+    elif fam == "vlm":
+        per = cfg.cross_attn_every
+        g_full = cfg.n_layers // per
+        mk = lambda g: dc.replace(cfg, n_layers=per * g)
+    elif fam == "hybrid":
+        per = cfg.shared_attn_every
+        g_full = cfg.n_layers // per
+        tail = cfg.n_layers - g_full * per
+        mk = lambda g: dc.replace(cfg, n_layers=per * g + tail)
+    elif cfg.attn_pattern == "local_global":
+        per = cfg.global_every
+        g_full = cfg.n_layers // per
+        tail = cfg.n_layers - g_full * per
+        mk = lambda g: dc.replace(cfg, n_layers=per * g + tail)
+    else:
+        g_full = cfg.n_layers
+        mk = lambda g: dc.replace(cfg, n_layers=g)
+    return g_full, mk
+
+
+def probe_corrected_costs(cfg, cell, mesh, plan):
+    """Trip-count-exact (flops, bytes, collective) via two unrolled probes."""
+    import dataclasses as dc
+
+    from repro.models import model as M
+    from repro.models import ssm as SS
+
+    g_full, mk = probe_cfgs(cfg)
+    if g_full == 1:
+        probes = [1]
+    else:
+        probes = [1, 2]
+    M.SCAN_UNROLL = True
+    SS.SCAN_ASSOC = True
+    try:
+        costs = []
+        for g in probes:
+            pc = mk(g)
+            if pc.family in ("ssm", "hybrid"):
+                pc = dc.replace(pc, scan_chunk=max(pc.scan_chunk, 1))
+            costs.append(_compile_costs(pc, cell, mesh, plan))
+    finally:
+        M.SCAN_UNROLL = False
+        SS.SCAN_ASSOC = False
+    f1 = costs[0]
+    f2 = costs[-1]
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        # clamp: tiny decode programs can fuse non-monotonically across g
+        delta = max(f2[k] - f1[k], 0.0)
+        out[k] = f1[k] + (g_full - 1) * delta
+    ops = set(f1["coll_by_op"]) | set(f2["coll_by_op"])
+    out["coll_by_op"] = {
+        o: f1["coll_by_op"].get(o, 0.0)
+        + (g_full - 1)
+        * max(f2["coll_by_op"].get(o, 0.0) - f1["coll_by_op"].get(o, 0.0), 0.0)
+        for o in ops
+    }
+    return out
+
+
+def lower_cell(arch: str, shape: str, mesh_kind: str, plan: str = "baseline",
+               remat: str = "none", probes: bool = True):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    import dataclasses
+
+    if remat != "none":
+        cfg = dataclasses.replace(cfg, remat=remat)
+    cell = SHAPES[shape]
+    if plan == "opt" and cell.kind != "train":
+        # serving plan holds weights in bf16 (§Perf HC-B iteration 3)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = n_chips(mesh)
+
+    t0 = time.time()
+    lowered = _lower(cfg, cell, mesh, plan)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+
+    # cost_analysis is PER-DEVICE and counts while-loop (scan) bodies once;
+    # recover trip-count-exact per-device costs from the unrolled probes
+    if probes:
+        corr = probe_corrected_costs(cfg, cell, mesh, plan)
+        flops_dev, bytes_dev, coll_dev = corr["flops"], corr["bytes"], corr["coll"]
+        coll_by_op = corr["coll_by_op"]
+    else:
+        flops_dev, bytes_dev, coll_dev = flops_raw, bytes_raw, coll["total_bytes"]
+        coll_by_op = coll["by_op"]
+
+    # global quantities (x chips) + roofline terms in seconds (per spec:
+    # term = global_quantity / (chips * per-chip rate) == per-device / rate)
+    flops = flops_dev * chips
+    bytes_acc = bytes_dev * chips
+    coll_total = coll_dev * chips
+    t_compute = flops / (chips * PEAK_FLOPS_BF16)
+    t_memory = bytes_acc / (chips * HBM_BW)
+    t_coll = coll_total / (chips * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # model flops (6ND train / 2ND inference)
+    n_active = cfg.n_active_params
+    if cell.kind == "train":
+        model_flops = 6.0 * n_active * cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        model_flops = 2.0 * n_active * cell.global_batch * cell.seq_len
+    else:
+        model_flops = 2.0 * n_active * cell.global_batch
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "plan": plan,
+        "remat": remat,
+        "chips": chips,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "hlo_flops_scan_raw_per_dev": flops_raw,
+        "hlo_bytes_scan_raw_per_dev": bytes_raw,
+        "collective_bytes": coll_total,
+        "collective_breakdown": coll_by_op,
+        "roofline": terms,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops) if flops else None,
+        "memory_analysis": parse_memory_analysis(mem),
+        "n_params": cfg.n_params,
+        "n_active_params": n_active,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--plan", default="baseline")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [
+            (a, c.name, m)
+            for a in ARCH_NAMES
+            for c in cells_for(a)
+            for m in ("single", "multi")
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    failures = []
+    for arch, shape, mesh_kind in cells:
+        tag = f"{arch}__{shape}__{mesh_kind}"
+        if args.plan != "baseline" or args.remat != "none":
+            tag += f"__{args.plan}__{args.remat}"
+        path = out_dir / f"{tag}.json"
+        if path.exists() and not args.force:
+            print(f"[skip] {tag}")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mesh_kind, args.plan, args.remat)
+            path.write_text(json.dumps(rec, indent=1))
+            r = rec["roofline"]
+            print(
+                f"  ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                f"flops={rec['hlo_flops']:.3e} coll={rec['collective_bytes']:.3e}B "
+                f"dom={rec['dominant']} "
+                f"t=({r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f})s",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append(tag)
+            print(f"  FAIL {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""HLO-text analysis: collective-byte accounting + memory analysis parsing.
+
+``cost_analysis`` does not report collective traffic, so we parse the
+compiled HLO: build a symbol table of instruction result sizes, then sum the
+operand sizes of every collective op (all-gather, all-reduce, reduce-scatter,
+all-to-all, collective-permute) — per EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Sum operand sizes of every collective op in the HLO module text."""
+    sizes: Dict[str, int] = {}
+    coll_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        sizes[name.lstrip("%")] = _type_bytes(type_str)
+        opbase = opcode.split(".")[0]
+        if opbase.endswith("-start"):
+            opbase = opbase[: -len("-start")]
+        if opbase in _COLLECTIVES:
+            coll_lines.append((opbase, line))
+
+    by_op: Dict[str, int] = {}
+    total = 0
+    for opbase, line in coll_lines:
+        # operand names inside the (...) call args
+        call = line.split("(", 1)[1]
+        ops = re.findall(r"%?([\w.\-]+)", call)
+        byte_sum = sum(sizes.get(o, 0) for o in ops if o in sizes)
+        if byte_sum == 0:
+            # fall back to the result size (covers fused operand spellings)
+            m = _DEF_RE.match(line)
+            byte_sum = _type_bytes(m.group(2)) if m else 0
+        by_op[opbase] = by_op.get(opbase, 0) + byte_sum
+        total += byte_sum
+    return {"total_bytes": float(total), "by_op": {k: float(v) for k, v in by_op.items()}}
+
+
+_MEM_RE = re.compile(r"([\w ]+):\s*([\d.]+)\s*([KMGT]?i?B)", re.IGNORECASE)
+_UNIT = {"B": 1, "KB": 1e3, "MB": 1e6, "GB": 1e9, "TB": 1e12,
+         "KIB": 2**10, "MIB": 2**20, "GIB": 2**30, "TIB": 2**40}
+
+
+def parse_memory_analysis(mem) -> Dict:
+    """Normalize compiled.memory_analysis() into plain bytes."""
+    out: Dict[str, float] = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0)
+        )
+        return out
+    # string fallback
+    for key, num, unit in _MEM_RE.findall(str(mem)):
+        out[key.strip().lower().replace(" ", "_")] = float(num) * _UNIT.get(
+            unit.upper(), 1
+        )
+    return out

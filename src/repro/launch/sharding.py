@@ -1,0 +1,277 @@
+"""Sharding plans: parameter / optimizer / batch / cache PartitionSpecs.
+
+Baseline plan (paper-faithful distribution, DESIGN.md §4):
+  * dense weights: Megatron TP over "model" x ZeRO-3 FSDP over ("pod","data")
+  * MoE experts: EP over ("pod","data"), expert FFN over "model"
+  * embeddings: vocab over "model", d_model over FSDP axes
+  * batch: DP over ("pod","data"); long-context (B=1) cells shard the
+    sequence/state dims instead
+  * optimizer state mirrors the param specs 1:1
+
+``plan`` variants ("baseline" | "opt") let the §Perf hillclimb switch
+collective layouts without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeCell
+from .mesh import dp_axes
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(n: int, mesh, axes) -> bool:
+    return n % _size(mesh, axes) == 0
+
+
+def param_specs(cfg: ModelConfig, mesh, params_shape, plan: str = "baseline",
+                serve: bool = False):
+    """PartitionSpec pytree for params (shapes from jax.eval_shape).
+
+    ``serve`` + plan="opt": dense weights drop the FSDP factor (pure TP,
+    replicated over the DP axes) so decode steps stop paying per-token
+    weight all-gathers (§Perf finding 2); MoE experts stay EP-sharded
+    (statically resident, no gathers).
+    """
+    ep = dp_axes(mesh)
+    fsdp = None if (serve and plan == "opt") else ep
+    model = "model"
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        key = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+
+        def lead(base: int):
+            return (None,) * (nd - base)
+
+        # embeddings
+        if key == "embed":
+            return P(model, fsdp)
+        if key == "unembed":
+            return P(fsdp, model)
+        # attention
+        if key in ("wq", "wk", "wv") and "attn" in ps or key in ("wq", "wk", "wv") and ("self" in ps or "cross" in ps):
+            return P(*lead(2), fsdp, model)
+        if key == "wo" and ("attn" in ps or "self" in ps or "cross" in ps):
+            return P(*lead(2), model, fsdp)
+        # MoE expert stacks: (..., E, D, Fe) / (..., E, Fe, D). EP over the
+        # FSDP axes when E divides; otherwise (granite: 40 experts vs 16/32
+        # shards — explicit in_shardings cannot pad) fall back to TP-style
+        # sharding of the expert matrices with replicated expert dim.
+        if cfg.family == "moe" and "mlp" in ps and "shared" not in ps:
+            ep_ok = _div(cfg.n_experts, mesh, ep)
+            if key in ("wg", "wi"):
+                if ep_ok:
+                    return P(*lead(3), ep, None, model)
+                return P(*lead(3), None, fsdp, model)
+            if key == "wo":
+                if ep_ok:
+                    return P(*lead(3), ep, model, None)
+                return P(*lead(3), None, model, fsdp)
+            if key == "router":
+                return P(*lead(2), fsdp, None)
+        # dense MLP (incl. shared expert)
+        if key in ("wg", "wi") and nd >= 2:
+            return P(*lead(2), fsdp, model)
+        if key == "wo" and nd >= 2:
+            return P(*lead(2), model, fsdp)
+        # mamba projections
+        if key == "in_proj":
+            return P(*lead(2), fsdp, model)
+        if key == "out_proj":
+            return P(*lead(2), model, fsdp)
+        if key == "x_proj":
+            return P(*lead(2), model, None)
+        if key == "dt_proj":
+            return P(*lead(2), None, model)
+        if key == "conv_w":
+            return P(*lead(2), None, model)
+        if key == "A_log" and nd >= 2 and shape[-1] == cfg.d_state:
+            return P(*lead(2), model, None)
+        # everything small (norms, biases, gates, scalar stacks): replicated
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_specs(param_spec_tree):
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Specs for the training/prefill batch dict."""
+    dp = dp_axes(mesh)
+    b = cell.global_batch
+    tok_spec = P(dp, None) if _div(b, mesh, dp) else P(None, None)
+    specs: Dict[str, Any] = {"tokens": tok_spec, "labels": tok_spec}
+    if cfg.family == "encdec":
+        specs["enc_embed"] = P(dp if _div(b, mesh, dp) else None, None, None)
+    if cfg.family == "vlm":
+        specs["img_embed"] = P(dp if _div(b, mesh, dp) else None, None, None)
+    if cell.kind == "prefill":
+        specs.pop("labels")
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, mesh, cache_shape,
+                plan: str = "baseline"):
+    """PartitionSpec pytree for the decode cache (shapes from eval_shape)."""
+    dp = dp_axes(mesh)
+    model = "model"
+    b = cell.global_batch
+    batch_ok = _div(b, mesh, dp)
+
+    kv_keys = {
+        "k", "v", "gk", "gv", "lk", "lv", "tk", "tv",
+        "self_k", "self_v", "cross_k", "cross_v", "shared_k", "shared_v",
+    }
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        key = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        nd = leaf.ndim
+        spec = [None] * nd
+        # locate the batch dim: first dim equal to the cell's global batch
+        # (all cache layouts place batch before head dims)
+        bi = next((i for i, s in enumerate(shape) if s == b), None)
+
+        if key in kv_keys:
+            if bi is None:
+                bi = nd - 4  # (…, B, C, K, Dh)
+            ci, ki, di = bi + 1, bi + 2, bi + 3
+            if batch_ok:
+                spec[bi] = dp
+            elif _div(shape[ci], mesh, dp):
+                spec[ci] = dp  # long-context: shard the sequence dim
+            if _div(shape[ki], mesh, model):
+                spec[ki] = model
+            elif plan != "opt" and _div(shape[di], mesh, model):
+                # baseline: Dh-sharded KV (measured: forces per-step cache
+                # reshards — the opt plan replicates non-dividing KV heads
+                # and spreads the cache over the sequence dim instead)
+                spec[di] = model
+            if (plan == "opt" and batch_ok and spec[ki] is None
+                    and spec[di] is None and _div(shape[ci], mesh, model)):
+                spec[ci] = model
+            return P(*spec)
+
+        if key == "conv":
+            if bi is None:
+                bi = nd - 3
+            if batch_ok:
+                spec[bi] = dp
+            if _div(shape[-1], mesh, model):
+                spec[-1] = model
+            return P(*spec)
+
+        if key == "ssm":
+            if bi is None:
+                bi = nd - 3 if cfg.ssm_kind == "mamba1" else nd - 4
+            if batch_ok:
+                spec[bi] = dp
+            if cfg.ssm_kind == "mamba1":
+                di = bi + 1  # (…, B, Di, Ds)
+                if not batch_ok and _div(shape[di], mesh, dp + (model,)):
+                    spec[di] = dp + (model,)
+                elif _div(shape[di], mesh, model):
+                    spec[di] = model
+            else:
+                hi, pi = bi + 1, bi + 3  # (…, B, H, N, P)
+                if not batch_ok and _div(shape[hi], mesh, dp):
+                    spec[hi] = dp
+                    if _div(shape[pi], mesh, model):
+                        spec[pi] = model
+                elif _div(shape[hi], mesh, model):
+                    spec[hi] = model
+            return P(*spec)
+
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def decode_token_spec(cell: ShapeCell, mesh):
+    dp = dp_axes(mesh)
+    return P(dp) if _div(cell.global_batch, mesh, dp) else P(None)
+
+
+def activation_rules(cfg: ModelConfig, cell: ShapeCell, mesh, plan: str):
+    """Activation sharding constraints for the optimized plan.
+
+    The baseline leaves activations to GSPMD propagation, which resolves the
+    GQA head split to full replication over "model" (§Perf finding 1); the
+    opt plan pins heads (or head_dim when heads don't divide) to "model" and
+    batch to the DP axes, and pins the MoE dispatch buffer to (EP, -, TP).
+    """
+    if plan != "opt":
+        return {}
+    from jax.sharding import NamedSharding
+
+    dp = dp_axes(mesh)
+    b_ok = _div(cell.global_batch, mesh, dp)
+    bspec = dp if b_ok else None
+    msize = _size(mesh, "model")
+    rules = {}
+
+    def heads_spec(n, allow_dh: bool):
+        if n % msize == 0:
+            return ("model", None)
+        # KV heads that don't divide TP are REPLICATED (Megatron GQA
+        # duplication) — sharding d_head instead forces per-step cache
+        # reshards (§Perf HC-B iteration 2, refuted hypothesis).
+        if allow_dh and cfg.d_head % msize == 0:
+            return (None, "model")
+        return (None, None)
+
+    hq = heads_spec(cfg.n_heads, allow_dh=True)
+    hkv = heads_spec(cfg.n_kv_heads, allow_dh=False)
+    rules["attn_q"] = P(bspec, None, *hq)
+    rules["attn_kv"] = P(bspec, None, *hkv)
+    if cfg.family == "moe":
+        ep = dp if _div(cfg.n_experts, mesh, dp) else None
+        rules["moe_buf"] = P(
+            ep, None, "model" if cfg.d_model % msize == 0 else None
+        )
+    if cfg.ssm_kind:
+        di_ok = cfg.d_inner % msize == 0
+        rules["ssm_scan"] = P(bspec, None, "model" if di_ok else None, None)
+        rules["ssm_scan5"] = P(
+            bspec, None, None, "model" if di_ok else None, None
+        )
+    return {k: NamedSharding(mesh, v) for k, v in rules.items()}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,73 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``input_specs`` provides weak-type-correct, shardable stand-ins for every
+model input (no device allocation) — the dry-run lowers against these.
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, the vision arch gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelApi, ModelConfig, ShapeCell, build_model
+from ..optim import AdamW
+
+
+def make_train_step(api: ModelApi, opt: AdamW) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.train_loss, has_aux=True
+        )(params, batch)
+        new_p, new_s, gn = opt.update(grads, opt_state, params)
+        out = {"loss": loss, "grad_norm": gn}
+        out.update(metrics)
+        return new_p, new_s, out
+
+    return train_step
+
+
+def make_prefill_step(api: ModelApi, max_seq: int) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, dict(batch, max_seq=max_seq))
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelApi) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if cell.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embed"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["img_embed"] = sds((b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_state(api: ModelApi, opt: AdamW | None):
+    params = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    opt_state = jax.eval_shape(opt.init, params) if opt is not None else None
+    return params, opt_state
+
+
+def abstract_cache(api: ModelApi, cell: ShapeCell):
+    return jax.eval_shape(
+        lambda: api.init_cache(cell.global_batch, cell.seq_len)
+    )
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell):
+    sds = jax.ShapeDtypeStruct
+    return sds((cell.global_batch,), jnp.int32), sds((), jnp.int32)

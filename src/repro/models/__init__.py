@@ -1,0 +1,13 @@
+"""Model substrate: configs, layers, SSM blocks, family assemblies."""
+from .config import LONG_CTX_ARCHS, SHAPES, ModelConfig, ShapeCell, cells_for
+from .model import ModelApi, build_model
+
+__all__ = [
+    "LONG_CTX_ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeCell",
+    "cells_for",
+    "ModelApi",
+    "build_model",
+]

@@ -1,0 +1,322 @@
+"""Shared transformer layer library (pure-JAX pytree params, explicit einsums).
+
+Conventions:
+  x: (B, S, D) activations in cfg.dtype; params in cfg.param_dtype (cast at use)
+  attention caches: k/v (B, S_cache, N_kv, Dh)
+  all init fns take an explicit PRNG key and return nested dict pytrees
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+NEG_INF = -1e9  # additive mask value (bf16-safe)
+
+# Activation-sharding rules, set by the launch layer (sharding.activation_rules)
+# before lowering and cleared after. Keys: attn_q / attn_kv / moe_buf /
+# ssm_scan. Empty dict -> no constraints (the paper-faithful baseline plan).
+ACT_RULES: Dict[str, object] = {}
+
+
+def constrain(x, key: str):
+    spec = ACT_RULES.get(key)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def cast(x, cfg: ModelConfig):
+    return x.astype(cfg.dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, shape=()):
+    d = cfg.d_model
+    p = {"scale": jnp.ones(shape + (d,), cfg.param_dtype)}
+    if cfg.use_layernorm:
+        p["bias"] = jnp.zeros(shape + (d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.use_layernorm:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, N, Dh), positions: (B, S) or (S,) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal / sliding-window / cross)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, shape=()):
+    d, nh, nk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(nh * dh)
+    return {
+        "wq": _normal(ks[0], shape + (d, nh * dh), sc, cfg.param_dtype),
+        "wk": _normal(ks[1], shape + (d, nk * dh), sc, cfg.param_dtype),
+        "wv": _normal(ks[2], shape + (d, nk * dh), sc, cfg.param_dtype),
+        "wo": _normal(ks[3], shape + (nh * dh, d), so, cfg.param_dtype),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, kv_input=None):
+    b, s, _ = x.shape
+    nh, nk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kv_in = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dh->bsh", x, cast(p["wq"], cfg)).reshape(b, s, nh, dh)
+    k = jnp.einsum("bsd,dh->bsh", kv_in, cast(p["wk"], cfg)).reshape(
+        b, kv_in.shape[1], nk, dh
+    )
+    v = jnp.einsum("bsd,dh->bsh", kv_in, cast(p["wv"], cfg)).reshape(
+        b, kv_in.shape[1], nk, dh
+    )
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,Nh,Dh), k/v: (B,Sk,Nkv,Dh), mask: (B|1, Sq, Sk) bool or None."""
+    b, sq, nh, dh = q.shape
+    nk = k.shape[2]
+    g = nh // nk
+    qg = q.reshape(b, sq, nk, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(dh)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v).reshape(b, sq, nh * dh)
+    return out
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0, window: int = 0):
+    """bool (1, sq, sk): query i attends keys j with j <= i+offset
+    and (window == 0 or j > i+offset-window)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m[None]
+
+
+def attention(p, x, cfg: ModelConfig, *, window: int = 0, positions=None,
+              kv_input=None, causal: bool = True):
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, kv_input=kv_input)
+    if kv_input is None:  # self-attention: rope over shared positions
+        pos = positions if positions is not None else jnp.arange(s)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        mask = causal_mask(s, s, 0, window) if causal else None
+    else:
+        mask = None  # cross-attention: all encoder/image tokens visible
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsh,hd->bsd", out, cast(p["wo"], cfg))
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                     window: int = 0):
+    """One-token decode with cache update.
+
+    x: (B, 1, D); cache_k/v: (B, C, Nkv, Dh); pos: int32 scalar — absolute
+    position of the new token. For windowed layers the cache is a ring buffer
+    of C == window slots (slot = pos % C); for full layers C == max_seq.
+    """
+    b = x.shape[0]
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+    c = cache_k.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    q = rope(q, jnp.full((1,), pos), cfg.rope_theta)
+    k = rope(k, jnp.full((1,), pos), cfg.rope_theta)
+    slot = jnp.where(window, pos % jnp.maximum(c, 1), pos)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    kj = jnp.arange(c)[None, :]
+    if window:
+        valid = (kj <= pos % c) | (pos >= c)  # ring buffer fill state
+        # ring semantics: every resident slot is within the window by
+        # construction once pos >= c; before that only slots <= pos are live
+        mask = valid[:, None, :]
+    else:
+        mask = (kj <= pos)[:, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    y = jnp.einsum("bsh,hd->bsd", out, cast(p["wo"], cfg))
+    return y, cache_k, cache_v
+
+
+def attention_decode_cross(p, x, cfg: ModelConfig, cross_k, cross_v):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    q, _, _ = _qkv(p, x, cfg)
+    out = _sdpa(q, cross_k, cross_v, None, cfg)
+    return jnp.einsum("bsh,hd->bsd", out, cast(p["wo"], cfg))
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    b, se, _ = enc_out.shape
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("bsd,dh->bsh", enc_out, cast(p["wk"], cfg)).reshape(b, se, nk, dh)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, cast(p["wv"], cfg)).reshape(b, se, nk, dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, shape=(), d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {"wo": _normal(ks[2], shape + (f, d), so, cfg.param_dtype)}
+    if cfg.act == "swiglu":
+        p["wg"] = _normal(ks[0], shape + (d, f), sc, cfg.param_dtype)
+        p["wi"] = _normal(ks[1], shape + (d, f), sc, cfg.param_dtype)
+    else:
+        p["wi"] = _normal(ks[1], shape + (d, f), sc, cfg.param_dtype)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["wg"], cfg))
+        h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"], cfg))
+        a = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"], cfg))
+        if cfg.act == "squared_relu":
+            a = jnp.square(jax.nn.relu(h))
+        else:
+            a = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", a, cast(p["wo"], cfg))
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts (GShard-style capacity dispatch; EP/TP shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, shape=()):
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    sc, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(fe)
+    p = {
+        "router": _normal(ks[0], shape + (d, e), sc, cfg.param_dtype),
+        "wg": _normal(ks[1], shape + (e, d, fe), sc, cfg.param_dtype),
+        "wi": _normal(ks[2], shape + (e, d, fe), sc, cfg.param_dtype),
+        "wo": _normal(ks[3], shape + (e, fe, d), so, cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        sh_cfg = cfg
+        p["shared"] = init_mlp(
+            ks[4], sh_cfg, shape, d_ff=cfg.d_expert * cfg.n_shared_experts
+        )
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    cap = int(np.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """Top-k routed experts with static capacity (overflow tokens dropped —
+    standard GShard semantics; aux load-balance loss returned)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, cast(p["router"], cfg)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)  # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)  # (t, k, e)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) - flat_oh  # exclusive
+    pos = jnp.sum(pos_in_e * flat_oh, axis=-1).reshape(t, k)
+    fits = pos < cap
+
+    # dispatch: scatter tokens into (e, cap, d)
+    buf = jnp.zeros((e, cap, d), dtype=x.dtype)
+    ei = jnp.where(fits, eidx, e)  # drop overflow
+    pi = jnp.where(fits, pos, 0)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    buf = buf.at[ei, pi].set(xt[tok_idx], mode="drop")
+    buf = constrain(buf, "moe_buf")
+
+    # expert FFN (einsum over stacked experts -> MXU-friendly, EP-shardable)
+    if cfg.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, cast(p["wg"], cfg))
+        h = jnp.einsum("ecd,edf->ecf", buf, cast(p["wi"], cfg))
+        a = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, cast(p["wi"], cfg))
+        a = jnp.square(jax.nn.relu(h)) if cfg.act == "squared_relu" else jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", a, cast(p["wo"], cfg))
+
+    # combine: gather back and weight
+    gathered = out_buf[ei, pi]  # (t, k, d); overflow reads expert e -> OOB
+    gathered = jnp.where(fits[..., None], gathered, 0.0)
+    yt = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), axis=1)
+
+    if cfg.n_shared_experts:
+        yt = yt + apply_mlp(p["shared"], xt[None], cfg)[0]
+
+    # load-balance aux loss (Switch): e * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx[:, 0], e, dtype=jnp.float32), axis=0)
+    ) / t
+    frac = jnp.sum(jax.nn.one_hot(eidx, e, dtype=jnp.float32), axis=(0, 1)) / (t * k)
+    aux = e * jnp.sum(frac * me)
+    return yt.reshape(b, s, d), aux

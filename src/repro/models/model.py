@@ -1,0 +1,856 @@
+"""Model assembly for the six architecture families.
+
+Every family provides the same API (``ModelApi``):
+  init(rng)                         -> params pytree (stacked layer dims)
+  train_loss(params, batch)         -> (loss, metrics)
+  prefill(params, batch)            -> (last_logits, cache)
+  decode_step(params, cache, tok, pos) -> (logits, cache)
+  init_cache(batch_size, max_seq)   -> cache pytree
+
+Layer stacks run under ``lax.scan`` over stacked params (compile-time sanity
+at 60-100 layers); heterogeneous archs (gemma3 5:1 local:global, zamba2
+shared-attn, vision cross-attn) scan over structurally identical *groups*
+with a tail segment (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .config import ModelConfig
+
+
+
+# Layer-stack scans honor a module-level unroll flag: the dry-run's probe
+# compiles unroll them so XLA cost analysis sees every trip (a while-loop
+# body is otherwise counted once — see launch/dryrun.py).
+SCAN_UNROLL = False
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=SCAN_UNROLL)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+# ---------------------------------------------------------------------------
+# shared machinery
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def init_embeddings(key, cfg: ModelConfig):
+    vp, d = cfg.padded_vocab, cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {
+        "embed": L._normal(k1, (vp, d), 1.0, cfg.param_dtype),
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._normal(k2, (d, vp), 1.0 / np.sqrt(d), cfg.param_dtype)
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+
+_VOCAB_MASK_CACHE: Dict[Tuple[int, int], np.ndarray] = {}
+
+
+def _vocab_pad_bias(cfg: ModelConfig):
+    key = (cfg.vocab, cfg.padded_vocab)
+    if key not in _VOCAB_MASK_CACHE:
+        m = np.zeros((cfg.padded_vocab,), np.float32)
+        m[cfg.vocab :] = L.NEG_INF
+        _VOCAB_MASK_CACHE[key] = m
+    return _VOCAB_MASK_CACHE[key]
+
+
+def unembed(params, x, cfg: ModelConfig):
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(cfg.dtype))
+    return logits.astype(jnp.float32) + _vocab_pad_bias(cfg)
+
+
+def xent_loss(logits, labels):
+    """logits (B,S,Vp) f32; labels (B,S) int32, -1 masked."""
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll * mask) / denom
+
+
+def sinusoidal_pos(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _ring_fill(kv, window):
+    """Scatter the last `window` positions of (B,S,N,Dh) into ring slots."""
+    s = kv.shape[1]
+    w = min(window, s)
+    slots = (jnp.arange(s - w, s) % window).astype(jnp.int32)
+    ring = jnp.zeros(kv.shape[:1] + (window,) + kv.shape[2:], kv.dtype)
+    return ring.at[:, slots].set(kv[:, s - w :])
+
+
+# ===========================================================================
+# dense decoder (yi, internlm2, nemotron) — also the base for moe
+# ===========================================================================
+
+def _init_block(key, cfg: ModelConfig, shape=(), moe: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg, shape),
+        "ln2": L.init_norm(cfg, shape),
+        "attn": L.init_attention(k1, cfg, shape),
+    }
+    p["mlp"] = L.init_moe(k2, cfg, shape) if moe else L.init_mlp(k2, cfg, shape)
+    return p
+
+
+def _block_fwd(p, x, cfg: ModelConfig, *, window=0, moe=False):
+    x = x + L.attention(p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, window=window)
+    h = L.apply_norm(p["ln2"], x, cfg)
+    if moe:
+        y, aux = L.apply_moe(p["mlp"], h, cfg)
+        return x + y, aux
+    return x + L.apply_mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+def _block_decode(p, x, cfg, k_c, v_c, pos, *, window=0, moe=False):
+    h = L.apply_norm(p["ln1"], x, cfg)
+    y, k_c, v_c = L.attention_decode(p["attn"], h, cfg, k_c, v_c, pos, window=window)
+    x = x + y
+    h = L.apply_norm(p["ln2"], x, cfg)
+    if moe:
+        y, _ = L.apply_moe(p["mlp"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg)
+    return x + y, k_c, v_c
+
+
+def build_decoder(cfg: ModelConfig) -> ModelApi:
+    """dense | moe | local_global dense (gemma3-style)."""
+    moe = cfg.family == "moe"
+    lg = cfg.attn_pattern == "local_global"
+    nl = cfg.n_layers
+    if lg:
+        per = cfg.global_every  # 5 local + 1 global per group
+        n_groups = nl // per
+        n_tail = nl - n_groups * per
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+
+    def init(rng):
+        p = init_embeddings(rng, cfg)
+        if not lg:
+            p["blocks"] = _init_block(jax.random.fold_in(rng, 1), cfg, (nl,), moe)
+        else:
+            p["local_groups"] = _init_block(
+                jax.random.fold_in(rng, 1), cfg, (n_groups, per - 1), moe
+            )
+            p["global_blocks"] = _init_block(
+                jax.random.fold_in(rng, 2), cfg, (n_groups,), moe
+            )
+            if n_tail:
+                p["tail"] = _init_block(
+                    jax.random.fold_in(rng, 3), cfg, (n_tail,), moe
+                )
+        return p
+
+    def forward(params, x):
+        aux_total = jnp.zeros((), jnp.float32)
+        if not lg:
+            body = _maybe_remat(
+                lambda xx, bp: _block_fwd(bp, xx, cfg, moe=moe), cfg
+            )
+
+            def scan_body(xx, bp):
+                xx, aux = body(xx, bp)
+                return xx, aux
+
+            x, auxs = _scan(scan_body, x, params["blocks"])
+            aux_total = jnp.sum(auxs)
+        else:
+            def local_body(xx, bp):
+                xx, aux = _block_fwd(bp, xx, cfg, window=cfg.window, moe=moe)
+                return xx, aux
+
+            local_body = _maybe_remat(local_body, cfg)
+
+            def group_body(xx, gp):
+                lp, gp_blk = gp
+                xx, aux1 = _scan(local_body, xx, lp)
+                xx, aux2 = _block_fwd(gp_blk, xx, cfg, window=0, moe=moe)
+                return xx, jnp.sum(aux1) + aux2
+
+            x, auxs = _scan(
+                group_body, x, (params["local_groups"], params["global_blocks"])
+            )
+            aux_total = jnp.sum(auxs)
+            if n_tail:
+                x, aux3 = _scan(local_body, x, params["tail"])
+                aux_total = aux_total + jnp.sum(aux3)
+        return x, aux_total
+
+    def train_loss(params, batch):
+        x = embed(params, batch["tokens"], cfg)
+        x, aux = forward(params, x)
+        logits = unembed(params, x, cfg)
+        loss = xent_loss(logits, batch["labels"])
+        return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+    def init_cache(batch_size, max_seq):
+        def kv(*shape):
+            return jnp.zeros(shape + (nk, dh), cfg.dtype)
+
+        if not lg:
+            return {
+                "k": kv(nl, batch_size, max_seq),
+                "v": kv(nl, batch_size, max_seq),
+            }
+        w = cfg.window
+        c = {
+            "lk": kv(n_groups, per - 1, batch_size, w),
+            "lv": kv(n_groups, per - 1, batch_size, w),
+            "gk": kv(n_groups, batch_size, max_seq),
+            "gv": kv(n_groups, batch_size, max_seq),
+        }
+        if n_tail:
+            c["tk"] = kv(n_tail, batch_size, w)
+            c["tv"] = kv(n_tail, batch_size, w)
+        return c
+
+    def prefill(params, batch):
+        """Full-sequence forward; emits last-position logits + a filled cache."""
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        max_seq = batch.get("max_seq", s)
+        x = embed(params, tokens, cfg)
+        cache = init_cache(bsz, max_seq)
+
+        def kv_of(bp, h):
+            _, k, v = L._qkv(bp["attn"], h, cfg)
+            k = L.rope(k, jnp.arange(h.shape[1]), cfg.rope_theta)
+            return k, v
+
+        if not lg:
+            def body(xx, bp):
+                h = L.apply_norm(bp["ln1"], xx, cfg)
+                k, v = kv_of(bp, h)
+                xx, _ = _block_fwd(bp, xx, cfg, moe=moe)
+                return xx, (k, v)
+
+            x, (ks, vs) = _scan(body, x, params["blocks"])
+            pad = max_seq - s
+            if pad:
+                zeros = jnp.zeros(ks.shape[:2] + (pad,) + ks.shape[3:], ks.dtype)
+                ks = jnp.concatenate([ks, zeros], axis=2)
+                vs = jnp.concatenate([vs, zeros], axis=2)
+            cache = {"k": ks, "v": vs}
+        else:
+            def lbody(xx, bp):
+                h = L.apply_norm(bp["ln1"], xx, cfg)
+                k, v = kv_of(bp, h)
+                xx, _ = _block_fwd(bp, xx, cfg, window=cfg.window, moe=moe)
+                return xx, (_ring_fill(k, cfg.window), _ring_fill(v, cfg.window))
+
+            def gbody(xx, gp):
+                lp, gblk = gp
+                xx, (lk, lv) = _scan(lbody, xx, lp)
+                h = L.apply_norm(gblk["ln1"], xx, cfg)
+                k, v = kv_of(gblk, h)
+                pad = max_seq - s
+                if pad:
+                    z = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+                    k = jnp.concatenate([k, z], 1)
+                    v = jnp.concatenate([v, z], 1)
+                xx, _ = _block_fwd(gblk, xx, cfg, window=0, moe=moe)
+                return xx, (lk, lv, k, v)
+
+            x, (lk, lv, gk, gv) = _scan(
+                gbody, x, (params["local_groups"], params["global_blocks"])
+            )
+            cache = {"lk": lk, "lv": lv, "gk": gk, "gv": gv}
+            if n_tail:
+                x, (tk, tv) = _scan(lbody, x, params["tail"])
+                cache["tk"], cache["tv"] = tk, tv
+        logits = unembed(params, x[:, -1:, :], cfg)
+        return logits[:, 0], cache
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed(params, tokens[:, None], cfg)
+        if not lg:
+            def body(xx, blk):
+                bp, k_c, v_c = blk
+                xx, k_c, v_c = _block_decode(bp, xx, cfg, k_c, v_c, pos, moe=moe)
+                return xx, (k_c, v_c)
+
+            x, (k2, v2) = _scan(
+                body, x, (params["blocks"], cache["k"], cache["v"])
+            )
+            cache = {"k": k2, "v": v2}
+        else:
+            def lbody(xx, blk):
+                bp, k_c, v_c = blk
+                xx, k_c, v_c = _block_decode(
+                    bp, xx, cfg, k_c, v_c, pos, window=cfg.window, moe=moe
+                )
+                return xx, (k_c, v_c)
+
+            def gbody(xx, blk):
+                lp, lk, lv, gblk, gk, gv = blk
+                xx, (lk2, lv2) = _scan(lbody, xx, (lp, lk, lv))
+                xx, gk2, gv2 = _block_decode(gblk, xx, cfg, gk, gv, pos, moe=moe)
+                return xx, (lk2, lv2, gk2, gv2)
+
+            x, (lk, lv, gk, gv) = _scan(
+                gbody,
+                x,
+                (
+                    params["local_groups"],
+                    cache["lk"],
+                    cache["lv"],
+                    params["global_blocks"],
+                    cache["gk"],
+                    cache["gv"],
+                ),
+            )
+            new_cache = {"lk": lk, "lv": lv, "gk": gk, "gv": gv}
+            if n_tail:
+                x, (tk, tv) = _scan(
+                    lbody, x, (params["tail"], cache["tk"], cache["tv"])
+                )
+                new_cache["tk"], new_cache["tv"] = tk, tv
+            cache = new_cache
+        logits = unembed(params, x[:, 0, :], cfg)
+        return logits, cache
+
+    return ModelApi(cfg, init, train_loss, prefill, decode_step, init_cache)
+
+
+# ===========================================================================
+# ssm (falcon-mamba) and hybrid (zamba2)
+# ===========================================================================
+
+def build_ssm(cfg: ModelConfig) -> ModelApi:
+    nl = cfg.n_layers
+    init_mixer = S.init_mamba1 if cfg.ssm_kind == "mamba1" else S.init_mamba2
+    fwd = S.mamba1_forward if cfg.ssm_kind == "mamba1" else S.mamba2_forward
+    step = S.mamba1_step if cfg.ssm_kind == "mamba1" else S.mamba2_step
+    init_state = (
+        S.mamba1_init_state if cfg.ssm_kind == "mamba1" else S.mamba2_init_state
+    )
+
+    def init(rng):
+        p = init_embeddings(rng, cfg)
+        p["blocks"] = {
+            "ln": L.init_norm(cfg, (nl,)),
+            "mixer": init_mixer(jax.random.fold_in(rng, 1), cfg, (nl,)),
+        }
+        return p
+
+    def block(bp, x, return_state=False):
+        h = L.apply_norm(bp["ln"], x, cfg)
+        if return_state:
+            y, st = fwd(bp["mixer"], h, cfg, return_state=True)
+            return x + y, st
+        return x + fwd(bp["mixer"], h, cfg)
+
+    block_r = _maybe_remat(lambda xx, bp: (block(bp, xx), None), cfg)
+
+    def train_loss(params, batch):
+        x = embed(params, batch["tokens"], cfg)
+        x, _ = _scan(lambda xx, bp: block_r(xx, bp), x, params["blocks"])
+        logits = unembed(params, x, cfg)
+        loss = xent_loss(logits, batch["labels"])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, max_seq):
+        st = init_state(cfg, batch_size)
+        return {
+            "states": jax.tree.map(
+                lambda t: jnp.zeros((nl,) + t.shape, t.dtype), st
+            )
+        }
+
+    def prefill(params, batch):
+        x = embed(params, batch["tokens"], cfg)
+
+        def body(xx, bp):
+            xx, st = block(bp, xx, return_state=True)
+            return xx, st
+
+        x, states = _scan(body, x, params["blocks"])
+        logits = unembed(params, x[:, -1:, :], cfg)
+        return logits[:, 0], {"states": states}
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed(params, tokens[:, None], cfg)[:, 0]
+
+        def body(xx, blk):
+            bp, st = blk
+            h = L.apply_norm(bp["ln"], xx, cfg)
+            y, st = step(bp["mixer"], h, st, cfg)
+            return xx + y, st
+
+        x, states = _scan(body, x, (params["blocks"], cache["states"]))
+        logits = unembed(params, x, cfg)
+        return logits, {"states": states}
+
+    return ModelApi(cfg, init, train_loss, prefill, decode_step, init_cache)
+
+
+def build_hybrid(cfg: ModelConfig) -> ModelApi:
+    """zamba2: mamba2 backbone + one shared attention block every N layers."""
+    nl, per = cfg.n_layers, cfg.shared_attn_every
+    n_groups = nl // per
+    n_tail = nl - n_groups * per
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+
+    def init(rng):
+        p = init_embeddings(rng, cfg)
+        p["groups"] = {
+            "ln": L.init_norm(cfg, (n_groups, per)),
+            "mixer": S.init_mamba2(jax.random.fold_in(rng, 1), cfg, (n_groups, per)),
+        }
+        if n_tail:
+            p["tail"] = {
+                "ln": L.init_norm(cfg, (n_tail,)),
+                "mixer": S.init_mamba2(jax.random.fold_in(rng, 2), cfg, (n_tail,)),
+            }
+        p["shared_attn"] = {
+            "ln": L.init_norm(cfg),
+            "attn": L.init_attention(jax.random.fold_in(rng, 3), cfg),
+        }
+        return p
+
+    def mamba_block(bp, x, return_state=False):
+        h = L.apply_norm(bp["ln"], x, cfg)
+        if return_state:
+            y, st = S.mamba2_forward(bp["mixer"], h, cfg, return_state=True)
+            return x + y, st
+        return x + S.mamba2_forward(bp["mixer"], h, cfg)
+
+    mamba_r = _maybe_remat(lambda xx, bp: (mamba_block(bp, xx), None), cfg)
+
+    def train_forward(params, x):
+        sp = params["shared_attn"]
+
+        def gbody(xx, gp):
+            xx, _ = _scan(lambda a, b: mamba_r(a, b), xx, gp)
+            h = L.apply_norm(sp["ln"], xx, cfg)
+            xx = xx + L.attention(sp["attn"], h, cfg)
+            return xx, None
+
+        x, _ = _scan(gbody, x, params["groups"])
+        if n_tail:
+            x, _ = _scan(lambda a, b: mamba_r(a, b), x, params["tail"])
+        return x
+
+    def train_loss(params, batch):
+        x = embed(params, batch["tokens"], cfg)
+        x = train_forward(params, x)
+        logits = unembed(params, x, cfg)
+        loss = xent_loss(logits, batch["labels"])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, max_seq):
+        st = S.mamba2_init_state(cfg, batch_size)
+        cache = {
+            "g_states": jax.tree.map(
+                lambda t: jnp.zeros((n_groups, per) + t.shape, t.dtype), st
+            ),
+            "shared_k": jnp.zeros(
+                (n_groups, batch_size, max_seq, nk, dh), cfg.dtype
+            ),
+            "shared_v": jnp.zeros(
+                (n_groups, batch_size, max_seq, nk, dh), cfg.dtype
+            ),
+        }
+        if n_tail:
+            cache["t_states"] = jax.tree.map(
+                lambda t: jnp.zeros((n_tail,) + t.shape, t.dtype), st
+            )
+        return cache
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        max_seq = batch.get("max_seq", s)
+        x = embed(params, tokens, cfg)
+        sp = params["shared_attn"]
+
+        def mbody(xx, bp):
+            xx, st = mamba_block(bp, xx, return_state=True)
+            return xx, st
+
+        def gbody(xx, gp):
+            xx, sts = _scan(mbody, xx, gp)
+            h = L.apply_norm(sp["ln"], xx, cfg)
+            _, k, v = L._qkv(sp["attn"], h, cfg)
+            k = L.rope(k, jnp.arange(s), cfg.rope_theta)
+            pad = max_seq - s
+            if pad:
+                z = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+                k = jnp.concatenate([k, z], 1)
+                v = jnp.concatenate([v, z], 1)
+            xx = xx + L.attention(sp["attn"], h, cfg)
+            return xx, (sts, k, v)
+
+        x, (g_states, ks, vs) = _scan(gbody, x, params["groups"])
+        cache = {"g_states": g_states, "shared_k": ks, "shared_v": vs}
+        if n_tail:
+            x, t_states = _scan(mbody, x, params["tail"])
+            cache["t_states"] = t_states
+        logits = unembed(params, x[:, -1:, :], cfg)
+        return logits[:, 0], cache
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed(params, tokens[:, None], cfg)[:, 0]
+        sp = params["shared_attn"]
+
+        def mbody(xx, blk):
+            bp, st = blk
+            h = L.apply_norm(bp["ln"], xx, cfg)
+            y, st = S.mamba2_step(bp["mixer"], h, st, cfg)
+            return xx + y, st
+
+        def gbody(xx, blk):
+            gp, gst, k_c, v_c = blk
+            xx, gst = _scan(mbody, xx, (gp, gst))
+            h = L.apply_norm(sp["ln"], xx[:, None, :], cfg)
+            y, k_c, v_c = L.attention_decode(sp["attn"], h, cfg, k_c, v_c, pos)
+            xx = xx + y[:, 0]
+            return xx, (gst, k_c, v_c)
+
+        x, (g_states, ks, vs) = _scan(
+            gbody,
+            x,
+            (params["groups"], cache["g_states"], cache["shared_k"], cache["shared_v"]),
+        )
+        new_cache = {"g_states": g_states, "shared_k": ks, "shared_v": vs}
+        if n_tail:
+            x, t_states = _scan(
+                mbody, x, (params["tail"], cache["t_states"])
+            )
+            new_cache["t_states"] = t_states
+        logits = unembed(params, x, cfg)
+        return logits, new_cache
+
+    return ModelApi(cfg, init, train_loss, prefill, decode_step, init_cache)
+
+
+# ===========================================================================
+# encoder-decoder (whisper) — stubbed audio frontend (frame embeddings in)
+# ===========================================================================
+
+def build_encdec(cfg: ModelConfig) -> ModelApi:
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+
+    def init(rng):
+        p = init_embeddings(rng, cfg)
+        p["enc_blocks"] = _init_block(jax.random.fold_in(rng, 1), cfg, (ne,))
+        k = jax.random.fold_in(rng, 2)
+        p["dec_blocks"] = {
+            "ln1": L.init_norm(cfg, (nd,)),
+            "ln_x": L.init_norm(cfg, (nd,)),
+            "ln2": L.init_norm(cfg, (nd,)),
+            "self": L.init_attention(jax.random.fold_in(k, 0), cfg, (nd,)),
+            "cross": L.init_attention(jax.random.fold_in(k, 1), cfg, (nd,)),
+            "mlp": L.init_mlp(jax.random.fold_in(k, 2), cfg, (nd,)),
+        }
+        p["enc_norm"] = L.init_norm(cfg)
+        return p
+
+    def encode(params, frames):
+        x = frames.astype(cfg.dtype)
+        x = x + jnp.asarray(sinusoidal_pos(x.shape[1], cfg.d_model), cfg.dtype)
+
+        def body(xx, bp):
+            h = L.apply_norm(bp["ln1"], xx, cfg)
+            xx = xx + L.attention(bp["attn"], h, cfg, causal=False)
+            h = L.apply_norm(bp["ln2"], xx, cfg)
+            return xx + L.apply_mlp(bp["mlp"], h, cfg), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = _scan(body, x, params["enc_blocks"])
+        return L.apply_norm(params["enc_norm"], x, cfg)
+
+    def dec_block(bp, x, enc_out, cfg=cfg):
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        x = x + L.attention(bp["self"], h, cfg)
+        h = L.apply_norm(bp["ln_x"], x, cfg)
+        x = x + L.attention(bp["cross"], h, cfg, kv_input=enc_out, causal=False)
+        h = L.apply_norm(bp["ln2"], x, cfg)
+        return x + L.apply_mlp(bp["mlp"], h, cfg)
+
+    def decode_full(params, tokens, enc_out):
+        x = embed(params, tokens, cfg)
+        body = _maybe_remat(
+            lambda xx, bp: (dec_block(bp, xx, enc_out), None), cfg
+        )
+        x, _ = _scan(body, x, params["dec_blocks"])
+        return x
+
+    def train_loss(params, batch):
+        enc_out = encode(params, batch["enc_embed"])
+        x = decode_full(params, batch["tokens"], enc_out)
+        logits = unembed(params, x, cfg)
+        loss = xent_loss(logits, batch["labels"])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, max_seq, enc_seq=None):
+        se = enc_seq or cfg.enc_seq
+        kv = lambda *sh: jnp.zeros(sh + (nk, dh), cfg.dtype)
+        return {
+            "self_k": kv(nd, batch_size, max_seq),
+            "self_v": kv(nd, batch_size, max_seq),
+            "cross_k": kv(nd, batch_size, se),
+            "cross_v": kv(nd, batch_size, se),
+        }
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        max_seq = batch.get("max_seq", s)
+        enc_out = encode(params, batch["enc_embed"])
+        x = embed(params, tokens, cfg)
+
+        def body(xx, bp):
+            h = L.apply_norm(bp["ln1"], xx, cfg)
+            _, k, v = L._qkv(bp["self"], h, cfg)
+            k = L.rope(k, jnp.arange(s), cfg.rope_theta)
+            ck, cv = L.cross_kv(bp["cross"], enc_out, cfg)
+            pad = max_seq - s
+            if pad:
+                z = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+                k = jnp.concatenate([k, z], 1)
+                v = jnp.concatenate([v, z], 1)
+            xx = dec_block(bp, xx, enc_out)
+            return xx, (k, v, ck, cv)
+
+        x, (sk, sv, ck, cv) = _scan(body, x, params["dec_blocks"])
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+        logits = unembed(params, x[:, -1:, :], cfg)
+        return logits[:, 0], cache
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed(params, tokens[:, None], cfg)
+
+        def body(xx, blk):
+            bp, k_c, v_c, ck, cv = blk
+            h = L.apply_norm(bp["ln1"], xx, cfg)
+            y, k_c, v_c = L.attention_decode(bp["self"], h, cfg, k_c, v_c, pos)
+            xx = xx + y
+            h = L.apply_norm(bp["ln_x"], xx, cfg)
+            xx = xx + L.attention_decode_cross(bp["cross"], h, cfg, ck, cv)
+            h = L.apply_norm(bp["ln2"], xx, cfg)
+            xx = xx + L.apply_mlp(bp["mlp"], h, cfg)
+            return xx, (k_c, v_c)
+
+        x, (sk, sv) = _scan(
+            body,
+            x,
+            (
+                params["dec_blocks"],
+                cache["self_k"],
+                cache["self_v"],
+                cache["cross_k"],
+                cache["cross_v"],
+            ),
+        )
+        cache = dict(cache, self_k=sk, self_v=sv)
+        logits = unembed(params, x[:, 0, :], cfg)
+        return logits, cache
+
+    return ModelApi(cfg, init, train_loss, prefill, decode_step, init_cache)
+
+
+# ===========================================================================
+# vlm (llama-3.2-vision): every Nth layer cross-attends to patch embeddings
+# ===========================================================================
+
+def build_vlm(cfg: ModelConfig) -> ModelApi:
+    per = cfg.cross_attn_every
+    n_groups = cfg.n_layers // per
+    n_self = per - 1
+    nk, dh = cfg.n_kv_heads, cfg.d_head
+
+    def init(rng):
+        p = init_embeddings(rng, cfg)
+        p["self_groups"] = _init_block(
+            jax.random.fold_in(rng, 1), cfg, (n_groups, n_self)
+        )
+        k = jax.random.fold_in(rng, 2)
+        p["cross_blocks"] = {
+            "ln1": L.init_norm(cfg, (n_groups,)),
+            "ln2": L.init_norm(cfg, (n_groups,)),
+            "attn": L.init_attention(jax.random.fold_in(k, 0), cfg, (n_groups,)),
+            "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg, (n_groups,)),
+            "gate": jnp.zeros((n_groups,), cfg.param_dtype),  # zero-init gate
+        }
+        return p
+
+    def cross_block(bp, x, img, cfg=cfg):
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        g = jnp.tanh(bp["gate"]).astype(cfg.dtype)
+        x = x + g * L.attention(bp["attn"], h, cfg, kv_input=img, causal=False)
+        h = L.apply_norm(bp["ln2"], x, cfg)
+        return x + L.apply_mlp(bp["mlp"], h, cfg)
+
+    def forward(params, x, img):
+        sbody = _maybe_remat(
+            lambda xx, bp: (_block_fwd(bp, xx, cfg)[0], None), cfg
+        )
+
+        def gbody(xx, gp):
+            sp, cp = gp
+            xx, _ = _scan(sbody, xx, sp)
+            xx = cross_block(cp, xx, img)
+            return xx, None
+
+        x, _ = _scan(
+            gbody, x, (params["self_groups"], params["cross_blocks"])
+        )
+        return x
+
+    def train_loss(params, batch):
+        img = batch["img_embed"].astype(cfg.dtype)
+        x = embed(params, batch["tokens"], cfg)
+        x = forward(params, x, img)
+        logits = unembed(params, x, cfg)
+        loss = xent_loss(logits, batch["labels"])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, max_seq, n_img=None):
+        ni = n_img or cfg.n_img_tokens
+        kv = lambda *sh: jnp.zeros(sh + (nk, dh), cfg.dtype)
+        return {
+            "self_k": kv(n_groups, n_self, batch_size, max_seq),
+            "self_v": kv(n_groups, n_self, batch_size, max_seq),
+            "cross_k": kv(n_groups, batch_size, ni),
+            "cross_v": kv(n_groups, batch_size, ni),
+        }
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        max_seq = batch.get("max_seq", s)
+        img = batch["img_embed"].astype(cfg.dtype)
+        x = embed(params, tokens, cfg)
+
+        def sbody(xx, bp):
+            h = L.apply_norm(bp["ln1"], xx, cfg)
+            _, k, v = L._qkv(bp["attn"], h, cfg)
+            k = L.rope(k, jnp.arange(s), cfg.rope_theta)
+            pad = max_seq - s
+            if pad:
+                z = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+                k = jnp.concatenate([k, z], 1)
+                v = jnp.concatenate([v, z], 1)
+            xx, _ = _block_fwd(bp, xx, cfg)
+            return xx, (k, v)
+
+        def gbody(xx, gp):
+            sp, cp = gp
+            xx, (k, v) = _scan(sbody, xx, sp)
+            ck, cv = L.cross_kv(cp["attn"], img, cfg)
+            xx = cross_block(cp, xx, img)
+            return xx, (k, v, ck, cv)
+
+        x, (sk, sv, ck, cv) = _scan(
+            gbody, x, (params["self_groups"], params["cross_blocks"])
+        )
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+        logits = unembed(params, x[:, -1:, :], cfg)
+        return logits[:, 0], cache
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed(params, tokens[:, None], cfg)
+
+        def sbody(xx, blk):
+            bp, k_c, v_c = blk
+            xx, k_c, v_c = _block_decode(bp, xx, cfg, k_c, v_c, pos)
+            return xx, (k_c, v_c)
+
+        def gbody(xx, blk):
+            sp, sk, sv, cp, ck, cv = blk
+            xx, (sk2, sv2) = _scan(sbody, xx, (sp, sk, sv))
+            h = L.apply_norm(cp["ln1"], xx, cfg)
+            g = jnp.tanh(cp["gate"]).astype(cfg.dtype)
+            xx = xx + g * L.attention_decode_cross(cp["attn"], h, cfg, ck, cv)
+            h = L.apply_norm(cp["ln2"], xx, cfg)
+            xx = xx + L.apply_mlp(cp["mlp"], h, cfg)
+            return xx, (sk2, sv2)
+
+        x, (sk, sv) = _scan(
+            gbody,
+            x,
+            (
+                params["self_groups"],
+                cache["self_k"],
+                cache["self_v"],
+                params["cross_blocks"],
+                cache["cross_k"],
+                cache["cross_v"],
+            ),
+        )
+        cache = dict(cache, self_k=sk, self_v=sv)
+        logits = unembed(params, x[:, 0, :], cfg)
+        return logits, cache
+
+    return ModelApi(cfg, init, train_loss, prefill, decode_step, init_cache)
+
+
+# ===========================================================================
+# dispatch
+# ===========================================================================
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe"):
+        return build_decoder(cfg)
+    if cfg.family == "ssm":
+        return build_ssm(cfg)
+    if cfg.family == "hybrid":
+        return build_hybrid(cfg)
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    if cfg.family == "vlm":
+        return build_vlm(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,396 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD, chunked).
+
+TPU adaptation notes (DESIGN.md §4): Mamba-1 uses a memory-chunked hybrid
+scan — outer ``lax.scan`` over sequence chunks carrying the SSM state, inner
+``associative_scan`` within each chunk, so the (B, S, d_inner, d_state)
+tensor never materializes. Mamba-2 uses the SSD block-matmul formulation
+(chunked attention-like intra-block einsums + inter-chunk state recurrence),
+which maps onto the MXU instead of the VPU-bound elementwise scan.
+
+Both are validated in tests/test_ssm.py against a naive per-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _normal, cast, constrain
+
+# When True, the inter-chunk state recurrences use (unrolled) associative
+# scans instead of a sequential lax.scan: log-depth on real hardware and —
+# crucial for the dry-run probes — every trip is visible to XLA cost
+# analysis (a while-loop body is counted once). Slightly more memory.
+SCAN_ASSOC = False
+
+
+def _assoc_linear(decay, inject, axis: int):
+    """h_i = h_{i-1} * decay_i + inject_i via associative scan along ``axis``.
+
+    Returns (h_after, h_before): inclusive and exclusive (shift-right) scans.
+    decay broadcasts against inject over trailing dims.
+    """
+
+    def comb(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2 + s2
+
+    d_after, h_after = jax.lax.associative_scan(comb, (decay, inject), axis=axis)
+    zero = jnp.zeros_like(jax.lax.slice_in_dim(inject, 0, 1, axis=axis))
+    h_before = jnp.concatenate(
+        [zero, jax.lax.slice_in_dim(h_after, 0, inject.shape[axis] - 1, axis=axis)],
+        axis=axis,
+    )
+    return h_after, h_before
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared by both mamba variants)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (K, C), b: (C,) — depthwise causal convolution."""
+    k = w.shape[0]
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w[:, None, :].astype(x.dtype),  # (K, 1, C) with feature groups = C
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return out + b.astype(x.dtype)
+
+
+def conv_step(conv_state: jax.Array, x_t: jax.Array, w: jax.Array, b: jax.Array):
+    """Decode-time conv: conv_state (B, K-1, C) FIFO, x_t (B, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg: ModelConfig, shape=()):
+    d, di, ds, kc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.conv_dim
+    dtr = cfg.dt_rank_eff
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    a_init = jnp.broadcast_to(
+        jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32)), shape + (di, ds)
+    ).astype(pd)
+    return {
+        "in_proj": _normal(ks[0], shape + (d, 2 * di), 1 / np.sqrt(d), pd),
+        "conv_w": _normal(ks[1], shape + (kc, di), 1 / np.sqrt(kc), pd),
+        "conv_b": jnp.zeros(shape + (di,), pd),
+        "x_proj": _normal(ks[2], shape + (di, dtr + 2 * ds), 1 / np.sqrt(di), pd),
+        "dt_proj": _normal(ks[3], shape + (dtr, di), 1 / np.sqrt(dtr), pd),
+        "dt_bias": jnp.full(shape + (di,), -4.6, pd),  # softplus^-1(0.01)
+        "A_log": a_init,
+        "D": jnp.ones(shape + (di,), pd),
+        "out_proj": _normal(ks[4], shape + (di, d), 1 / np.sqrt(di), pd),
+    }
+
+
+def _mamba1_inner(cfg, x_conv, dt, b_t, c_t, a, h0):
+    """Linear recurrence h_t = exp(dt A) h_{t-1} + dt B x over one chunk.
+
+    x_conv/dt: (B, C, Di); b_t/c_t: (B, C, Ds); a: (Di, Ds); h0: (B, Di, Ds).
+    """
+    da = constrain(jnp.exp(dt[..., None] * a), "ssm_scan")  # (B, C, Di, Ds)
+    dbx = constrain((dt * x_conv)[..., None] * b_t[:, :, None, :], "ssm_scan")
+
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+    h = b_cum + a_cum * h0[:, None]  # (B, C, Di, Ds)
+    y = jnp.sum(h * c_t[:, :, None, :], axis=-1)  # (B, C, Di)
+    return y, h[:, -1]
+
+
+def mamba1_forward(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Mamba-1 mixer. x: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns the decode state after position S-1
+    (prefill -> decode handoff)."""
+    b, s, d = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank_eff
+    xz = jnp.einsum("bsd,de->bse", x, cast(p["in_proj"], cfg))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+
+    dbc = jnp.einsum("bsi,ie->bse", x_conv, cast(p["x_proj"], cfg))
+    dt_lr = dbc[..., :dtr]
+    b_t = dbc[..., dtr : dtr + ds].astype(jnp.float32)
+    c_t = dbc[..., dtr + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_lr, cast(p["dt_proj"], cfg)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xc32 = x_conv.astype(jnp.float32)
+
+    chunk = min(cfg.scan_chunk, s)
+    if s % chunk:
+        chunk = s  # fall back to single chunk for odd smoke shapes
+    nc = s // chunk
+
+    if SCAN_ASSOC:
+        # two-level associative form: per-chunk cumulatives in parallel,
+        # then an associative scan over chunk summaries (DESIGN.md §4)
+        da = constrain(
+            jnp.exp(dt[..., None] * a).reshape(b, nc, chunk, di, ds), "ssm_scan5"
+        )
+        dbx = constrain(
+            ((dt * xc32)[..., None] * b_t[:, :, None, :]).reshape(
+                b, nc, chunk, di, ds
+            ),
+            "ssm_scan5",
+        )
+        a_cum, b_cum = jax.lax.associative_scan(
+            lambda e1, e2: (e1[0] * e2[0], e2[0] * e1[1] + e2[1]),
+            (da, dbx),
+            axis=2,
+        )
+        h_aft, h_bef = _assoc_linear(a_cum[:, :, -1], b_cum[:, :, -1], axis=1)
+        h = b_cum + a_cum * h_bef[:, :, None]
+        y = jnp.sum(
+            h * c_t.reshape(b, nc, chunk, 1, ds), axis=-1
+        ).reshape(b, s, di)
+        h_last = h_aft[:, -1]
+    else:
+        def outer(h0, inputs):
+            xc_c, dt_c, b_c, c_c = inputs
+            y, h1 = _mamba1_inner(cfg, xc_c, dt_c, b_c, c_c, a, h0)
+            return h1, y
+
+        resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+        h_last, ys = jax.lax.scan(
+            outer, h0, (resh(xc32), resh(dt), resh(b_t), resh(c_t))
+        )
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + p["D"].astype(jnp.float32) * xc32
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["out_proj"], cfg))
+    if return_state:
+        kc = cfg.conv_dim
+        conv_state = x_in.astype(jnp.float32)[:, s - kc + 1 :, :]
+        return out, {"conv": conv_state, "ssm": h_last}
+    return out
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, cfg.d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba1_step(p, x_t, state, cfg: ModelConfig):
+    """One decode step. x_t: (B, D) -> (B, D); state updated in place."""
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank_eff
+    xz = jnp.einsum("bd,de->be", x_t, cast(p["in_proj"], cfg))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv_state, xc = conv_step(
+        state["conv"], x_in.astype(jnp.float32), p["conv_w"], p["conv_b"]
+    )
+    xc = jax.nn.silu(xc)
+    dbc = jnp.einsum("bi,ie->be", xc.astype(x_t.dtype), cast(p["x_proj"], cfg))
+    dt_lr, b_t, c_t = (
+        dbc[..., :dtr],
+        dbc[..., dtr : dtr + ds].astype(jnp.float32),
+        dbc[..., dtr + ds :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("br,ri->bi", dt_lr, cast(p["dt_proj"], cfg)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, :, None] * a)  # (B, Di, Ds)
+    h = da * state["ssm"] + (dt * xc)[:, :, None] * b_t[:, None, :]
+    y = jnp.sum(h * c_t[:, None, :], axis=-1) + p["D"].astype(jnp.float32) * xc
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, cast(p["out_proj"], cfg))
+    return out, {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, shape=()):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    h = cfg.n_ssm_heads
+    kc = cfg.conv_dim
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    return {
+        "in_proj": _normal(
+            ks[0], shape + (d, 2 * di + 2 * ds + h), 1 / np.sqrt(d), pd
+        ),
+        "conv_w": _normal(ks[1], shape + (kc, conv_ch), 1 / np.sqrt(kc), pd),
+        "conv_b": jnp.zeros(shape + (conv_ch,), pd),
+        "dt_bias": jnp.zeros(shape + (h,), pd),
+        "A_log": jnp.zeros(shape + (h,), pd),
+        "D": jnp.ones(shape + (h,), pd),
+        "norm_scale": jnp.ones(shape + (di,), pd),
+        "out_proj": _normal(ks[2], shape + (di, d), 1 / np.sqrt(di), pd),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., C) -> (..., C, C) with out[i, j] = sum_{k=j+1..i} x_k (i >= j)."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((c, c), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_t, c_t, chunk: int):
+    """SSD (Mamba-2) block-matmul scan.
+
+    x: (B,S,H,P), dt: (B,S,H) (post-softplus), a: (H,) negative,
+    b_t/c_t: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_t.shape[-1]
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    da = (dt * a).astype(jnp.float32)  # (B,S,H)
+
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h)
+    bc = b_t.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_t.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    dac_cs = jnp.cumsum(dac, axis=2)  # (B,nc,C,H)
+    # intra-chunk (attention-like, MXU-bound)
+    l_mat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B,nc,H,C,Z)
+    scores = jnp.einsum("bncd,bnzd->bncz", cc, bc)
+    y_diag = jnp.einsum("bncz,bnhcz,bnzhp->bnchp", scores, l_mat, xc)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(dac_cs[:, :, -1:, :] - dac_cs)  # (B,nc,C,H)
+    s_chunk = jnp.einsum("bnzd,bnzh,bnzhp->bnhdp", bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(dac_cs[:, :, -1, :])  # (B,nc,H)
+
+    if SCAN_ASSOC:
+        h_after, h_before = _assoc_linear(
+            chunk_decay[..., None, None], s_chunk, axis=1
+        )
+        h_last = h_after[:, -1]
+    else:
+        def body(h_in, inp):
+            cd, s_c = inp  # (B,H), (B,H,N,P)
+            h_bef = h_in
+            h_out = h_in * cd[..., None, None] + s_c
+            return h_out, h_bef
+
+        h_last, h_before = jax.lax.scan(
+            body,
+            jnp.zeros((bsz, h, n, p), jnp.float32),
+            (chunk_decay.swapaxes(0, 1), s_chunk.swapaxes(0, 1)),
+        )
+        h_before = h_before.swapaxes(0, 1)  # (B,nc,H,N,P)
+
+    decay_from_start = jnp.exp(dac_cs)  # (B,nc,C,H)
+    y_off = jnp.einsum("bncd,bnch,bnhdp->bnchp", cc, decay_from_start, h_before)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, ds, h = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, cast(p["in_proj"], cfg))
+    z = proj[..., :di]
+    xbc_pre = proj[..., di : di + di + 2 * ds]
+    dt_raw = proj[..., di + di + 2 * ds :]
+    xbc = jax.nn.silu(causal_conv1d(xbc_pre, p["conv_w"], p["conv_b"]))
+    x_in = xbc[..., :di].reshape(b, s, h, pdim)
+    b_t = xbc[..., di : di + ds]
+    c_t = xbc[..., di + ds :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_last = ssd_chunked(x_in, dt, a, b_t, c_t, cfg.ssm_chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf
+        * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+        * p["norm_scale"].astype(jnp.float32)
+    ).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["out_proj"], cfg))
+    if return_state:
+        kc = cfg.conv_dim
+        conv_state = xbc_pre.astype(jnp.float32)[:, s - kc + 1 :, :]
+        return out, {"conv": conv_state, "ssm": h_last}
+    return out
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.d_state, cfg.ssm_head_dim), jnp.float32
+        ),
+    }
+
+
+def mamba2_step(p, x_t, state, cfg: ModelConfig):
+    """One decode step. x_t: (B, D)."""
+    b, d = x_t.shape
+    di, ds, h = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+    proj = jnp.einsum("bd,de->be", x_t, cast(p["in_proj"], cfg))
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * ds]
+    dt_raw = proj[..., di + di + 2 * ds :]
+    conv_state, xbc = conv_step(
+        state["conv"], xbc.astype(jnp.float32), p["conv_w"], p["conv_b"]
+    )
+    xbc = jax.nn.silu(xbc)
+    x_in = xbc[..., :di].reshape(b, h, pdim)
+    b_t = xbc[..., di : di + ds]
+    c_t = xbc[..., di + ds :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # (B,H)
+    hs = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bd,bhp->bhdp", dt, b_t, x_in
+    )
+    y = jnp.einsum("bd,bhdp->bhp", c_t, hs)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x_in
+    y = y.reshape(b, di).astype(x_t.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf
+        * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+        * p["norm_scale"].astype(jnp.float32)
+    ).astype(x_t.dtype)
+    out = jnp.einsum("bi,id->bd", y, cast(p["out_proj"], cfg))
+    return out, {"conv": conv_state, "ssm": hs}

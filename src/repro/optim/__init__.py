@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+from .adamw import AdamW, clip_by_global_norm
+from .schedule import constant, cosine_warmup
+
+__all__ = ["AdamW", "clip_by_global_norm", "constant", "cosine_warmup"]

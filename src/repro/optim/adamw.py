@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay + global-norm clipping (pure pytrees).
+
+No optax dependency: the optimizer state mirrors the param pytree (so the
+sharding plan for params transfers 1:1 to m/v — ZeRO-3 style when params are
+FSDP-sharded), which the dry-run and checkpoint layers rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: float = 0.0  # 0 = no clipping
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params) -> Tuple[Any, Any, jax.Array]:
+        """Returns (new_params, new_state, grad_norm)."""
+        gn = jnp.zeros((), jnp.float32)
+        if self.max_grad_norm:
+            grads, gn = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self._lr(step)
+        c1 = 1.0 - self.b1**step.astype(jnp.float32)
+        c2 = 1.0 - self.b2**step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g32
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g32)
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gn

@@ -1,0 +1,74 @@
+"""Gradient compression: error-feedback int8 quantization.
+
+Two entry points:
+  * :class:`ErrorFeedbackInt8` — host-side wrapper around any optimizer:
+    quantize grads to int8 (per-leaf scale) before the update, carrying the
+    quantization residual forward (Karimireddy et al., "EF-SGD"). This models
+    a compressed gradient all-reduce: what the update sees is exactly what a
+    decompress-after-reduce would produce.
+  * :func:`compressed_psum` — the explicit shard_map collective: quantize,
+    psum int32, dequantize — used by the manual-collective train-step variant
+    and its equivalence test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed mean-reduce across ``axis_name`` (inside shard_map).
+
+    Scales are psum'd in f32 (negligible bytes); payload moves as int8 —
+    a 4x wire reduction vs f32 ring all-reduce.
+    """
+    q, scale = quantize_int8(g)
+    n = jax.lax.psum(1, axis_name)
+    total = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)
+    # each shard contributed ~q*scale; approximate the sum with the mean scale
+    return total.astype(jnp.float32) * (scale_sum / n) / n
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackInt8:
+    """opt wrapper: grads -> EF-int8 -> inner optimizer."""
+
+    inner: Any  # AdamW-like: init/update
+
+    def init(self, params):
+        return {
+            "inner": self.inner.init(params),
+            "residual": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+        }
+
+    def update(self, grads, state, params):
+        def comp(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(corrected)
+            deq = dequantize_int8(q, scale)
+            return deq, corrected - deq
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(state["residual"])
+        pairs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+        deq = treedef.unflatten([p[0] for p in pairs])
+        resid = treedef.unflatten([p[1] for p in pairs])
+        new_p, inner_state, gn = self.inner.update(deq, state["inner"], params)
+        return new_p, {"inner": inner_state, "residual": resid}, gn

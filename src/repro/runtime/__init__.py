@@ -1,0 +1,4 @@
+"""Runtime: fault-tolerant training loop, straggler mitigation, failures."""
+from .trainer import SimulatedFailure, Trainer, TrainerConfig
+
+__all__ = ["SimulatedFailure", "Trainer", "TrainerConfig"]

@@ -1,0 +1,220 @@
+"""Substrate tests: checkpoint/restart, fault tolerance, compression, data."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_smoke_config
+from repro.data import (
+    DBpediaLikeGenerator,
+    GeneratorConfig,
+    ReplicaTokenPipeline,
+    Verbalizer,
+)
+from repro.core import Dictionary, InterestExpr, IrapEngine, StepCapacities
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.optim.compression import (
+    ErrorFeedbackInt8,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.runtime import SimulatedFailure, Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    store = CheckpointStore(tmp_path)
+    state = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3)},
+        "opt": {"m": {"w": jnp.zeros((2, 3)), "b": jnp.zeros(3)},
+                "step": jnp.int32(7)},
+    }
+    for s in (10, 20, 30, 40):
+        store.save(s, state)
+    assert store.latest_step() == 40
+    # gc keeps 3
+    assert len(list(tmp_path.glob("step_*"))) == 3
+    restored, step = store.restore(state)
+    assert step == 40
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.arange(6.0).reshape(2, 3)
+    )
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_restore_with_resharding(tmp_path):
+    """Elastic path: restore onto an explicit (single-device) sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    store = CheckpointStore(tmp_path)
+    state = {"params": {"w": jnp.arange(8.0)}}
+    store.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"params": {"w": NamedSharding(mesh, P(None))}}
+    restored, _ = store.restore(state, shardings=sh)
+    assert restored["params"]["w"].sharding == sh["params"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# trainer: loss decreases, failure injection + restart resumes
+# ---------------------------------------------------------------------------
+def _toy_setup(tmp_path, seed=0):
+    cfg = get_smoke_config("internlm2-1.8b")
+    api = build_model(cfg)
+    opt = AdamW(learning_rate=3e-3, max_grad_norm=1.0)
+
+    def init_state():
+        params = api.init(jax.random.key(seed))
+        return params, opt.init(params)
+
+    rng = np.random.default_rng(0)
+    fixed = {
+        "tokens": rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32),
+    }
+
+    def data():
+        while True:
+            yield fixed  # memorizable batch -> loss must fall
+
+    step = make_train_step(api, opt)
+    tc = TrainerConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=5)
+    return step, init_state, data(), tc
+
+
+def test_trainer_loss_decreases(tmp_path):
+    step, init_state, data, tc = _toy_setup(tmp_path)
+    tr = Trainer(step, init_state, data, tc)
+    hist = tr.run(25)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.9
+
+
+def test_failure_injection_and_restart(tmp_path):
+    step, init_state, data, tc = _toy_setup(tmp_path)
+    tr = Trainer(step, init_state, data, tc)
+    with pytest.raises(SimulatedFailure):
+        tr.run(30, inject_failure_at=17)
+    loss_at_fail = tr.history[-1]["loss"]
+
+    # new trainer process: must resume from step 15 (last ckpt), not step 0
+    step2, init_state2, data2, _ = _toy_setup(tmp_path)
+    tr2 = Trainer(step2, init_state2, data2, tc)
+    assert tr2.step == 15
+    hist = tr2.run(10)
+    assert hist[0]["step"] == 16
+    # resumed trajectory continues converging (not a cold restart)
+    assert hist[-1]["loss"] < loss_at_fail * 1.1
+
+
+def test_straggler_detection(tmp_path):
+    step, init_state, data, tc = _toy_setup(tmp_path)
+    events = []
+    tr = Trainer(
+        step, init_state, data, tc, on_straggler=lambda s, dt: events.append(s)
+    )
+
+    # wrap the jitted step to inject one slow step
+    orig = tr.step_fn
+    import time as _t
+
+    def slow_step(p, s, b):
+        if tr.step == 14:
+            _t.sleep(1.0)
+        return orig(p, s, b)
+
+    tr.step_fn = slow_step
+    tr.run(20)
+    assert tr.straggler_events and tr.straggler_events[0]["step"] == 15
+    assert events and events[0] == 15
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.key(0), (257,)) * 3.0
+    q, scale = quantize_int8(g)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - g))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges_like_uncompressed():
+    """EF-int8 AdamW reaches (almost) the same optimum on a quadratic."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["w"] - target))
+
+    def run(opt):
+        params = {"w": jnp.zeros(64, jnp.float32)}
+        state = opt.init(params)
+        for _ in range(300):
+            g = jax.grad(loss_fn)(params)
+            params, state, _ = opt.update(g, state, params)
+        return float(loss_fn(params))
+
+    base = run(AdamW(learning_rate=3e-2))
+    comp = run(ErrorFeedbackInt8(AdamW(learning_rate=3e-2)))
+    assert comp < max(base * 3, 1e-2), (base, comp)
+
+
+# ---------------------------------------------------------------------------
+# data plane
+# ---------------------------------------------------------------------------
+def test_changeset_generator_consistency():
+    gen = DBpediaLikeGenerator(GeneratorConfig(
+        n_athletes=20, n_places=20, n_other=50, n_teams=5,
+        adds_per_changeset=40, removes_per_changeset=15, seed=3))
+    dump = gen.initial_dump()
+    assert dump.shape[0] > 100
+    live = set(gen.current)
+    for d_np, a_np in gen.stream(5):
+        # removes came from the live set; adds are new
+        live = live  # string-level invariants tracked inside generator
+        assert d_np.shape[1] == 3 and a_np.shape[1] == 3
+        assert a_np.shape[0] > 0
+    # determinism under seed
+    gen2 = DBpediaLikeGenerator(GeneratorConfig(
+        n_athletes=20, n_places=20, n_other=50, n_teams=5,
+        adds_per_changeset=40, removes_per_changeset=15, seed=3))
+    dump2 = gen2.initial_dump()
+    np.testing.assert_array_equal(dump, dump2)
+
+
+def test_replica_pipeline_end_to_end():
+    """Generator -> iRap subscription -> verbalizer -> LM batches."""
+    gen = DBpediaLikeGenerator(GeneratorConfig(
+        n_athletes=30, n_places=10, n_other=40, n_teams=6,
+        adds_per_changeset=30, removes_per_changeset=10, seed=1))
+    gen.initial_dump()
+    engine = IrapEngine(gen.dict)
+    expr = InterestExpr.parse(
+        "g", "t",
+        bgp=[("?f", "rdf:type", "dbo:SoccerPlayer"),
+             ("?f", "foaf:name", "?n"),
+             ("?f", "dbo:team", "?t"),
+             ("?t", "rdfs:label", "?tn")],
+    )
+    caps = StepCapacities(n_removed=256, n_added=512, tau=4096, rho=4096,
+                          pulls=8192, fanout=8)
+    init = gen.slice_for(
+        lambda t: t[0].startswith("dbr:Athlete") or t[0].startswith("dbr:Team")
+    )
+    sub = engine.register_interest(expr, caps, initial_target=init)
+    verb = Verbalizer(vocab=997, dictionary=gen.dict)
+    pipe = ReplicaTokenPipeline(verb, batch_size=4, seq_len=32)
+    for d_np, a_np in gen.stream(2):
+        sub.apply(d_np, a_np)
+    pipe.refresh(sub.tau)
+    batch = next(pipe)
+    assert batch["tokens"].shape == (4, 32)
+    assert batch["labels"].shape == (4, 32)
+    assert batch["tokens"].max() < 997
+    assert int(sub.tau.n) > 50
