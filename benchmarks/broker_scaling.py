@@ -1,0 +1,140 @@
+"""Subscriber-scaling sweep: fused broker vs looped per-interest engine.
+
+The paper's deployment has many applications subscribed to one source; the
+seed engine pays one full evaluation pass per subscriber per changeset. This
+sweep grows the subscriber count (1 -> 32) over a fixed synthetic stream and
+reports per-changeset wall time for
+
+  * looped — :class:`repro.core.IrapEngine` (one jitted step per interest),
+  * fused  — :class:`repro.core.Broker` (one consolidated pattern bank, one
+    fused jitted pass for all subscribers),
+
+plus the fused/looped speedup and the bank dedup ratio. Emits
+``experiments/bench/BENCH_broker.json`` so later PRs can track the
+subscriber-scaling trajectory.
+
+    PYTHONPATH=src python -m benchmarks.run --only broker
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    IrapEngine,
+    StepCapacities,
+    to_set,
+)
+
+from .common import csv_row, save_json
+
+N_CLASSES = 8  # interests share type patterns mod N_CLASSES -> bank dedup
+
+
+def _interest(i: int) -> InterestExpr:
+    return InterestExpr.parse(
+        source="synthetic://broker-sweep",
+        target=f"local://subscriber{i}",
+        bgp=[
+            ("?a", "rdf:type", f"cls{i % N_CLASSES}"),
+            ("?a", f"p{i}", "?v"),
+        ],
+    )
+
+
+def _caps() -> StepCapacities:
+    # the broker's target regime: many subscribers, modest per-subscriber
+    # state — per-changeset cost is dominated by per-subscriber dispatch and
+    # host-loop overhead, which the fused pass amortizes across all of them
+    return StepCapacities(
+        n_removed=64, n_added=64, tau=256, rho=128, pulls=64, fanout=4
+    )
+
+
+def _stream(
+    d: Dictionary, n_subs: int, n_changesets: int, seed: int = 0
+) -> Tuple[np.ndarray, List[Tuple[np.ndarray, np.ndarray]]]:
+    """Initial dump + changesets mixing interesting and churn triples."""
+    rng = np.random.default_rng(seed)
+
+    def rows(n):
+        out = []
+        for _ in range(n):
+            e = f"e{rng.integers(0, 400)}"
+            kind = rng.integers(0, 4)
+            if kind == 0:
+                out.append((e, "rdf:type", f"cls{rng.integers(0, N_CLASSES)}"))
+            elif kind == 1:
+                out.append((e, f"p{rng.integers(0, n_subs)}", f"o{rng.integers(0, 40)}"))
+            else:  # uninteresting churn dominates, like DBpedia Live
+                out.append((e, f"noise{rng.integers(0, 6)}", f"o{rng.integers(0, 40)}"))
+        return d.encode_triples(out)
+
+    tau0 = rows(100)
+    changesets = [(rows(24), rows(40)) for _ in range(n_changesets)]
+    return tau0, changesets
+
+
+def _bench_fused(d, exprs, tau0, changesets) -> Tuple[float, Broker]:
+    broker = Broker(d)
+    for e in exprs:
+        broker.subscribe(e, _caps(), initial_target=tau0)
+    broker.process_changeset(*changesets[0])  # compile + warm caches
+    t0 = time.perf_counter()
+    for d_np, a_np in changesets[1:]:
+        broker.process_changeset(d_np, a_np)
+    dt = (time.perf_counter() - t0) / (len(changesets) - 1)
+    return dt, broker
+
+
+def _bench_looped(d, exprs, tau0, changesets) -> Tuple[float, IrapEngine]:
+    engine = IrapEngine(d)
+    for e in exprs:
+        engine.register_interest(e, _caps(), initial_target=tau0)
+    engine.process_changeset(*changesets[0])
+    t0 = time.perf_counter()
+    for d_np, a_np in changesets[1:]:
+        engine.process_changeset(d_np, a_np)
+    dt = (time.perf_counter() - t0) / (len(changesets) - 1)
+    return dt, engine
+
+
+def run(scale: float = 1.0, sweep=(1, 2, 4, 8, 16, 32), n_changesets=6) -> str:
+    results = []
+    for n_subs in sweep:
+        exprs = [_interest(i) for i in range(n_subs)]
+        d = Dictionary()
+        tau0, changesets = _stream(d, n_subs, n_changesets)
+        fused_dt, broker = _bench_fused(d, exprs, tau0, changesets)
+        looped_dt, engine = _bench_looped(d, exprs, tau0, changesets)
+        # correctness guard: both paths must agree on every replica
+        for k in range(n_subs):
+            assert to_set(broker.subs[k].tau) == to_set(engine.subs[k].tau), k
+            assert to_set(broker.subs[k].rho) == to_set(engine.subs[k].rho), k
+        results.append(
+            {
+                "n_subscribers": n_subs,
+                "fused_us_per_changeset": fused_dt * 1e6,
+                "looped_us_per_changeset": looped_dt * 1e6,
+                "speedup": looped_dt / fused_dt,
+                "bank_lanes": broker.bank.n_lanes,
+                "bank_lanes_raw": sum(s.plan.n_total for s in broker.subs),
+            }
+        )
+    save_json(
+        "BENCH_broker",
+        {"sweep": results, "n_changesets": n_changesets, "scale": scale},
+    )
+    at8 = next((r for r in results if r["n_subscribers"] == 8), results[-1])
+    return csv_row(
+        "broker_scaling",
+        at8["fused_us_per_changeset"],
+        f"speedup@{at8['n_subscribers']}={at8['speedup']:.2f}x;"
+        f"max_subs={results[-1]['n_subscribers']};"
+        f"speedup@{results[-1]['n_subscribers']}={results[-1]['speedup']:.2f}x",
+    )

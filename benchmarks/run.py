@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from . import fig4_growth, kernels_micro, table1_changesets
+    from . import broker_scaling, fig4_growth, kernels_micro, table1_changesets
     from . import table23_interest_eval as t23
 
     benches = {
@@ -30,6 +30,7 @@ def main() -> None:
         "fig4_growth": lambda: fig4_growth.run(args.days, args.per_day, args.scale),
         "kernel_triple_match": kernels_micro.run_triple_match,
         "kernel_merge_probe": kernels_micro.run_merge_probe,
+        "broker_scaling": lambda: broker_scaling.run(args.scale),
     }
     print("name,us_per_call,derived")
     failures = []

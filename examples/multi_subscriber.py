@@ -1,0 +1,81 @@
+"""Multi-subscriber broker demo: many interests, one fused pass per changeset.
+
+Registers several subscribers (the paper-shaped Football interest plus a
+family of class-star interests) against one synthetic DBpedia-Live stream and
+propagates every changeset with a single fused broker step — contrast with
+examples/subscribe_replica.py, which drives the per-interest engine.
+
+    PYTHONPATH=src python examples/multi_subscriber.py --days 3 --subscribers 6
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core import Broker, InterestExpr, StepCapacities
+
+from benchmarks.common import FOOTBALL, default_generator, football_caps
+
+
+def class_interest(i: int) -> InterestExpr:
+    """Subscriber i mirrors one entity class + its names (same plan shape
+    for every i, so the broker evaluates all of them as one vmapped cohort)."""
+    cls = ["dbo:SoccerPlayer", "dbo:Place", "dbo:Person"][i % 3]
+    return InterestExpr.parse(
+        source="synthetic://dbpedia-live",
+        target=f"local://class{i}",
+        bgp=[("?e", "rdf:type", cls), ("?e", "foaf:name", "?name")],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=int, default=3)
+    ap.add_argument("--per-day", type=int, default=3)
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--subscribers", type=int, default=6)
+    args = ap.parse_args()
+
+    gen = default_generator(seed=7, scale=args.scale)
+    gen.initial_dump()
+    broker = Broker(gen.dict)
+
+    broker.subscribe(
+        FOOTBALL, football_caps(),
+        initial_target=gen.slice_for(
+            lambda t: t[0].startswith(("dbr:Athlete", "dbr:Team"))),
+    )
+    caps = StepCapacities(
+        n_removed=1024, n_added=2048, tau=1 << 14, rho=1 << 13, pulls=1 << 12,
+        fanout=8, dedup_candidates=1024,
+    )
+    for i in range(args.subscribers - 1):
+        broker.subscribe(class_interest(i), caps)
+
+    print(f"source: {len(gen.current)} triples | subscribers: "
+          f"{len(broker.subs)}")
+
+    cs_id = 0
+    for day in range(args.days):
+        for _ in range(args.per_day):
+            cs_id += 1
+            d_np, a_np = gen.changeset()
+            outs = broker.process_changeset(d_np, a_np)
+            st = broker.stats[-1]
+            per_sub = " ".join(
+                f"s{k}:r={int(o.r.n)},a={int(o.a.n)}"
+                for k, o in enumerate(outs)
+            )
+            print(
+                f"[day {day+1} cs {cs_id}] Δ=({d_np.shape[0]}-,{a_np.shape[0]}+) "
+                f"bank={st.n_lanes}/{st.n_lanes_raw} lanes "
+                f"({st.elapsed_s*1e3:.0f} ms fused) | {per_sub}"
+            )
+    print("\nfinal τ sizes:",
+          " ".join(f"s{k}={int(s.tau.n)}" for k, s in enumerate(broker.subs)),
+          f"| fused re-jits: {broker.rejit_count}")
+
+
+if __name__ == "__main__":
+    main()

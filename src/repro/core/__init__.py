@@ -5,9 +5,18 @@ Public API:
   InterestExpr / compile_interest            (repro.core.interest)
   make_side_evaluator / TripleIndex          (repro.core.evaluation)
   make_interest_step / IrapEngine            (repro.core.propagation)
+  Broker / make_broker_step                  (repro.core.broker)
 """
+from .broker import Broker, BrokerStats, BrokerSubscription, make_broker_step
 from .dictionary import Dictionary, parse_triples
-from .interest import CompiledInterest, InterestExpr, TriplePattern, compile_interest
+from .interest import (
+    CompiledInterest,
+    InterestExpr,
+    PatternBank,
+    TriplePattern,
+    build_pattern_bank,
+    compile_interest,
+)
 from .propagation import (
     ChangesetStats,
     EvalOutputs,
@@ -33,11 +42,17 @@ from .triples import (
 )
 
 __all__ = [
+    "Broker",
+    "BrokerStats",
+    "BrokerSubscription",
+    "make_broker_step",
     "Dictionary",
     "parse_triples",
     "CompiledInterest",
     "InterestExpr",
+    "PatternBank",
     "TriplePattern",
+    "build_pattern_bank",
     "compile_interest",
     "ChangesetStats",
     "EvalOutputs",

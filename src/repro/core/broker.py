@@ -1,0 +1,409 @@
+"""Multi-subscriber interest broker: one fused evaluation pass per changeset.
+
+The paper's headline deployment (§1, §3) is many remote applications each
+holding an interest expression ``i_g = <τ, b, op>`` (Definition 7) against
+one authoritative source. The seed :class:`~repro.core.propagation.IrapEngine`
+serves N subscribers with N independent jitted steps — N full pattern-match
+passes over every changeset. This module amortizes the scan:
+
+* All registered interests compile into one :class:`PatternBank`
+  (cross-interest dedup of identical triple patterns, static lane maps —
+  :func:`repro.core.interest.build_pattern_bank`).
+* Each changeset is evaluated by a **single fused jitted step**
+  (:func:`make_broker_step`): one chunked ``triple_match`` bank pass over the
+  deleted side D (shared verbatim by every subscriber) and one over the
+  concatenation of all subscribers' added sides ``I_k = A ∪ ρ_k``
+  (Definition 14), then bitset-lane routing (``kernels.ops.lane_bits``)
+  hands each subscriber its local pattern bits.
+* Subscribers whose interests share the same static plan shape (and
+  capacities) form a **cohort** evaluated by one ``jax.vmap`` over the
+  pattern values — op count, dispatch, and compile cost scale with the
+  number of distinct interest *shapes*, not subscribers.
+* Downstream of the bitmask, every subscriber runs the *same* traced
+  computation as the single-interest path — the side evaluators of
+  :mod:`repro.core.evaluation` (π / π', Definitions 11-12) with precomputed
+  bits and traced pattern values (``probe_dyn``), and
+  :func:`repro.core.propagation.combine_side_results` for
+  Δ(τ) = <r ∪ r', a> (Def 16), Δ(ρ) = <r_i, a_i ∪ r'> (Def 17), and the
+  target update Υ (Def 18). Per-subscriber outputs are therefore
+  bit-identical to N independent :func:`make_interest_step` runs.
+
+Paper-name ↔ code-name map (Definitions 13-18):
+
+========================  ====================================================
+paper                     code
+========================  ====================================================
+``d(i, D) = <r, r_i, r'>``  ``EvalOutputs.r / .r_i / .r_prime`` (Def 13)
+``α(i, A ∪ ρ) = <a, a_i>``  ``EvalOutputs.a / .a_i``            (Def 14)
+``Δ(τ)``                    applied to ``BrokerSubscription.tau`` (Def 16)
+``Δ(ρ)``                    applied to ``BrokerSubscription.rho`` (Def 17)
+``Υ``                       ``combine_side_results``              (Def 18)
+========================  ====================================================
+
+The host-side :class:`Broker` mirrors the iRap architecture's Interest
+Manager / Changeset Manager / Evaluator split: subscriptions register (and
+invalidate the fused step), changesets stream through
+:meth:`Broker.process_changeset`, and per-subscriber overflow doubles only
+that subscriber's capacities before a re-jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .dictionary import Dictionary
+from .evaluation import build_index, make_side_evaluator
+from .interest import (
+    CompiledInterest,
+    InterestExpr,
+    PatternBank,
+    build_pattern_bank,
+    compile_interest,
+)
+from .propagation import EvalOutputs, StepCapacities, combine_side_results
+from .triples import TripleStore, empty, from_array, union
+
+
+def _plan_shape_key(plan: CompiledInterest):
+    """Static evaluation structure of a plan — everything the traced
+    evaluator specializes on except the pattern *values* (which slots are
+    constant matters; what constant they hold does not)."""
+    const_mask = tuple(
+        tuple(int(x) >= 0 for x in row) for row in plan.patterns
+    )
+    return (
+        plan.n_bgp,
+        plan.n_ogp,
+        plan.kinds,
+        plan.anchor_slot,
+        plan.child_slot,
+        plan.child_var,
+        plan.eq_pairs,
+        plan.n_children,
+        const_mask,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cohort:
+    """Subscribers sharing plan shape + capacities: evaluated via one vmap."""
+
+    indices: Tuple[int, ...]
+    plan: CompiledInterest  # representative — static structure only
+    caps: StepCapacities
+    id_capacity: int
+
+
+def make_broker_step(
+    bank: PatternBank,
+    plans: Sequence[CompiledInterest],
+    caps_list: Sequence[StepCapacities],
+    id_capacities: Sequence[int],
+    matcher: Optional[Callable] = None,
+) -> Callable:
+    """Jitted fused step: (D, A, (τ_k,), (ρ_k,)) -> ((τ'_k,), (ρ'_k,), (out_k,)).
+
+    One chunked bank bitmask pass over D shared by everyone, one per cohort
+    over the stacked ``I_k`` sets, then **vmapped** side evaluation +
+    Δ/Υ combine per cohort: subscribers whose interests share the same
+    static shape (pattern kinds/slots/const-masks, Definition 7 structure)
+    and capacities are batched into a single traced computation, so the
+    op count — and with it dispatch and compile cost — is per *cohort*, not
+    per subscriber. Heterogeneous subscribers degrade gracefully to
+    size-1 cohorts.
+    """
+    n_subs = len(plans)
+    assert n_subs == len(caps_list) == len(id_capacities) == len(bank.lanes)
+    bank_dev = jnp.asarray(bank.patterns)
+
+    # group subscribers into shape-homogeneous cohorts (stable order)
+    groups: dict = {}
+    for k, (plan, caps, id_cap) in enumerate(
+        zip(plans, caps_list, id_capacities)
+    ):
+        key = (_plan_shape_key(plan), caps, id_cap)
+        groups.setdefault(key, []).append(k)
+    cohorts = [
+        _Cohort(
+            indices=tuple(idxs),
+            plan=plans[idxs[0]],
+            caps=caps_list[idxs[0]],
+            id_capacity=id_capacities[idxs[0]],
+        )
+        for idxs in groups.values()
+    ]
+
+    cohort_evals = []  # (eval_d, eval_a, pats (Nc, nt, 3), lanes (Nc, nt))
+    for c in cohorts:
+        eval_kw = dict(
+            id_capacity=c.id_capacity,
+            fanout=c.caps.fanout,
+            pull_capacity=c.caps.pulls,
+            matcher=matcher,
+            dedup_candidates=c.caps.dedup_candidates,
+            dynamic_patterns=True,
+        )
+        eval_d = make_side_evaluator(
+            c.plan, out_capacity=c.caps.n_removed, **eval_kw
+        )
+        eval_a = make_side_evaluator(c.plan, out_capacity=c.caps.n_i, **eval_kw)
+        pats = jnp.asarray(
+            np.stack([plans[k].patterns for k in c.indices]), jnp.int32
+        )
+        lanes = jnp.asarray(
+            np.array([bank.lanes[k] for k in c.indices], np.int32)
+        )
+        cohort_evals.append((eval_d, eval_a, pats, lanes))
+
+    def bank_words(spo: jax.Array) -> jax.Array:
+        return kops.pattern_bitmask_words(spo, bank_dev, matcher=matcher)
+
+    def tree_stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    def tree_index(tree, i):
+        return jax.tree.map(lambda x: x[i], tree)
+
+    @jax.jit
+    def step(
+        d_set: TripleStore,
+        a_set: TripleStore,
+        taus: Tuple[TripleStore, ...],
+        rhos: Tuple[TripleStore, ...],
+    ):
+        # fused pass 1: deleted side, shared by every subscriber
+        d_words = bank_words(d_set.spo)
+
+        tau1s = [None] * n_subs
+        rho1s = [None] * n_subs
+        outs = [None] * n_subs
+        for c, (eval_d, eval_a, pats, lanes) in zip(cohorts, cohort_evals):
+            nc = len(c.indices)
+            caps = c.caps
+            taus_c = tree_stack([taus[k] for k in c.indices])
+            rhos_c = tree_stack([rhos[k] for k in c.indices])
+
+            # I_k = A ∪ ρ_k (Def 14); fused pass 2 over the stacked cohort
+            i_sets, ovf_i = jax.vmap(lambda r: union(a_set, r, caps.n_i))(
+                rhos_c
+            )
+            i_cap = i_sets.spo.shape[1]
+            i_words = bank_words(i_sets.spo.reshape(-1, 3)).reshape(
+                nc, i_cap, bank.n_words
+            )
+
+            # bitset-lane routing: bank words -> per-member local bits
+            d_bits = kops.lane_bits_batched(
+                jnp.broadcast_to(d_words[None], (nc,) + d_words.shape), lanes
+            )
+            a_bits = kops.lane_bits_batched(i_words, lanes)
+
+            tgts = jax.vmap(build_index)(taus_c)
+            d_res = jax.vmap(
+                lambda tgt, bits, p: eval_d(d_set, tgt, bits, p)
+            )(tgts, d_bits, pats)
+            a_res = jax.vmap(
+                lambda i_set, tgt, bits, p: eval_a(i_set, tgt, bits, p)
+            )(i_sets, tgts, a_bits, pats)
+            tau1_c, rho1_c, out_c = jax.vmap(
+                lambda dr, ar, t, r, o: combine_side_results(
+                    dr, ar, t, r, caps, o
+                )
+            )(d_res, a_res, taus_c, rhos_c, ovf_i)
+
+            for pos, k in enumerate(c.indices):
+                tau1s[k] = tree_index(tau1_c, pos)
+                rho1s[k] = tree_index(rho1_c, pos)
+                outs[k] = tree_index(out_c, pos)
+        return tuple(tau1s), tuple(rho1s), tuple(outs)
+
+    return step
+
+
+class BrokerSubscription:
+    """One registered interest inside the broker: plan, caps, τ, ρ."""
+
+    def __init__(
+        self, expr: InterestExpr, dictionary: Dictionary, caps: StepCapacities
+    ):
+        self.expr = expr
+        self.dictionary = dictionary
+        self.caps = caps
+        self.plan = compile_interest(expr, dictionary)
+        self.id_capacity = dictionary.id_capacity * caps.id_headroom
+        self.tau = empty(caps.tau)
+        self.rho = empty(caps.rho)
+
+    def recompile(self, caps: StepCapacities | None = None) -> None:
+        """Refresh plan/capacities after dictionary or capacity growth."""
+        if caps is not None:
+            self.caps = caps
+        self.plan = compile_interest(self.expr, self.dictionary)
+        self.id_capacity = self.dictionary.id_capacity * self.caps.id_headroom
+        self.tau, _ = union(empty(self.caps.tau), self.tau, self.caps.tau)
+        self.rho, _ = union(empty(self.caps.rho), self.rho, self.caps.rho)
+
+    def init_target(self, triples: np.ndarray) -> bool:
+        """Load the initial RDFSlice-style subset into τ. True if caps grew."""
+        grew = False
+        while True:
+            store, overflow = from_array(
+                jnp.asarray(triples, jnp.int32), self.caps.tau
+            )
+            if not bool(overflow):
+                self.tau = store
+                return grew
+            self.recompile(self.caps.doubled())
+            grew = True
+
+
+@dataclasses.dataclass
+class BrokerStats:
+    """Per-changeset accounting for the fused pass (all subscribers)."""
+
+    changeset_id: int
+    n_subscribers: int
+    n_lanes: int  # deduplicated bank size
+    n_lanes_raw: int  # sum of per-interest pattern counts
+    total_removed: int
+    total_added: int
+    interesting_removed: int  # Σ_k |r_k|
+    interesting_added: int  # Σ_k |a_k|
+    elapsed_s: float
+
+
+class Broker:
+    """Host orchestrator batching all registered interests into one pass.
+
+    Drop-in counterpart of :class:`~repro.core.propagation.IrapEngine` for
+    the many-subscriber regime: ``subscribe`` replaces ``register_interest``
+    and ``process_changeset`` evaluates every subscription with a single
+    fused jitted step instead of one step per subscription.
+    """
+
+    def __init__(
+        self,
+        dictionary: Dictionary | None = None,
+        matcher: Optional[Callable] = None,
+    ):
+        self.dictionary = dictionary if dictionary is not None else Dictionary()
+        self.matcher = matcher
+        self.subs: List[BrokerSubscription] = []
+        self.stats: List[BrokerStats] = []
+        self.bank: PatternBank | None = None
+        self._step: Callable | None = None
+        self._counter = 0
+        self.rejit_count = 0  # fused-step (re)builds, for tests/benchmarks
+
+    # -- interest manager ---------------------------------------------------
+
+    def subscribe(
+        self,
+        expr: InterestExpr,
+        caps: StepCapacities = StepCapacities(),
+        initial_target: np.ndarray | None = None,
+    ) -> BrokerSubscription:
+        sub = BrokerSubscription(expr, self.dictionary, caps)
+        if initial_target is not None and initial_target.size:
+            sub.init_target(initial_target)
+        self.subs.append(sub)
+        self._step = None  # pattern bank changed: rebuild on next changeset
+        return sub
+
+    def unsubscribe(self, sub: BrokerSubscription) -> None:
+        self.subs.remove(sub)
+        self._step = None
+
+    # -- fused-step lifecycle -----------------------------------------------
+
+    def _rebuild(self) -> None:
+        for sub in self.subs:
+            sub.recompile()
+        self.bank = build_pattern_bank([s.plan for s in self.subs])
+        self._step = make_broker_step(
+            self.bank,
+            [s.plan for s in self.subs],
+            [s.caps for s in self.subs],
+            [s.id_capacity for s in self.subs],
+            matcher=self.matcher,
+        )
+        self.rejit_count += 1
+
+    def _ensure_step(self) -> None:
+        if self._step is None:
+            self._rebuild()
+            return
+        if any(
+            self.dictionary.id_capacity > s.id_capacity for s in self.subs
+        ):
+            self._rebuild()
+
+    # -- changeset manager + evaluator --------------------------------------
+
+    def process_changeset(
+        self, removed: np.ndarray, added: np.ndarray
+    ) -> List[EvalOutputs]:
+        """Evaluate one changeset for every subscriber in one fused pass.
+
+        Returns one :class:`EvalOutputs` per subscriber, in subscription
+        order — each bit-identical to what the seed per-interest engine
+        would produce for that subscriber alone.
+        """
+        self._counter += 1
+        if not self.subs:
+            return []
+        t0 = time.perf_counter()
+        while True:
+            # host-side capacity guard (per subscriber, like the seed engine)
+            for sub in self.subs:
+                while (
+                    removed.shape[0] > sub.caps.n_removed
+                    or added.shape[0] > sub.caps.n_added
+                ):
+                    sub.recompile(sub.caps.doubled())
+                    self._step = None
+            self._ensure_step()
+
+            d_cap = max(s.caps.n_removed for s in self.subs)
+            a_cap = max(s.caps.n_added for s in self.subs)
+            d_store, _ = from_array(jnp.asarray(removed, jnp.int32), d_cap)
+            a_store, _ = from_array(jnp.asarray(added, jnp.int32), a_cap)
+            tau1s, rho1s, outs = self._step(
+                d_store,
+                a_store,
+                tuple(s.tau for s in self.subs),
+                tuple(s.rho for s in self.subs),
+            )
+            overflowed = [
+                k for k in range(len(self.subs)) if bool(outs[k].overflow)
+            ]
+            if overflowed:
+                # grow only the subscribers that overflowed, then re-jit
+                for k in overflowed:
+                    self.subs[k].recompile(self.subs[k].caps.doubled())
+                self._step = None
+                continue
+            for k, sub in enumerate(self.subs):
+                sub.tau, sub.rho = tau1s[k], rho1s[k]
+            jax.block_until_ready(self.subs[-1].tau.spo)
+            elapsed = time.perf_counter() - t0
+            self.stats.append(
+                BrokerStats(
+                    changeset_id=self._counter,
+                    n_subscribers=len(self.subs),
+                    n_lanes=self.bank.n_lanes,
+                    n_lanes_raw=sum(s.plan.n_total for s in self.subs),
+                    total_removed=int(removed.shape[0]),
+                    total_added=int(added.shape[0]),
+                    interesting_removed=sum(int(o.r.n) for o in outs),
+                    interesting_added=sum(int(o.a.n) for o in outs),
+                    elapsed_s=elapsed,
+                )
+            )
+            return list(outs)

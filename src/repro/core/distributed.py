@@ -190,18 +190,32 @@ def make_distributed_evaluator(
         return jax.tree.map(lambda t: t[None], res)
 
     spec = P(axis, None, None)
-    mapped = jax.shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=SideResult(
-            interesting=TripleStore(spo=P(axis, None, None), n=P(axis)),
-            potential=TripleStore(spo=P(axis, None, None), n=P(axis)),
-            pulls=TripleStore(spo=P(axis, None, None), n=P(axis)),
-            overflow=P(axis),
-        ),
-        check_vma=False,  # binary-search carries mix varying/unvarying axes
+    out_specs = SideResult(
+        interesting=TripleStore(spo=P(axis, None, None), n=P(axis)),
+        potential=TripleStore(spo=P(axis, None, None), n=P(axis)),
+        pulls=TripleStore(spo=P(axis, None, None), n=P(axis)),
+        overflow=P(axis),
     )
+    # binary-search carries mix varying/unvarying axes, so replication
+    # checking is off (check_vma on current jax; check_rep pre-0.5)
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        mapped = _shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=out_specs,
+            check_rep=False,
+        )
     return jax.jit(mapped)
 
 

@@ -83,24 +83,59 @@ def probe(
     Probes use the SPO index for subject-bound patterns and the OPS index for
     object-bound ones; non-prefix constant slots are post-filtered.
     """
+    return probe_dyn(
+        index,
+        pattern,
+        jnp.asarray(pattern, jnp.int32),
+        bound_slot,
+        bound_vals,
+        fanout,
+    )
+
+
+def probe_dyn(
+    index: TripleIndex,
+    pattern_host: np.ndarray,  # (3,) int32 host row — static const/var structure
+    pattern_dev: jax.Array,  # (3,) int32 traced row — comparison values
+    bound_slot: int,
+    bound_vals: jax.Array,
+    fanout: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """:func:`probe` with traced pattern *values* and static structure.
+
+    The broker's batched (vmapped) path evaluates whole cohorts of
+    same-shape interests at once, so the constant slots' values must be
+    traced operands (they differ per subscriber) while which slots are
+    constant — probe depth, index choice, post-filter set — stays static
+    (identical across the cohort by construction). Produces exactly the
+    values of :func:`probe` for equal inputs.
+    """
     if bound_slot == 1:
         raise ValueError("predicate-bound probes are unsupported (compile-time)")
-    ps, pp, po = int(pattern[0]), int(pattern[1]), int(pattern[2])
+    const = [int(pattern_host[k]) >= 0 for k in range(3)]
+    vals = [pattern_dev[k] for k in range(3)]
     if bound_slot == 0:
         store = index.spo
-        c1, c2 = pp, po  # prefix column order after the bound subject
+        (c1_const, c1_val), (c2_const, c2_val) = (
+            (const[1], vals[1]),
+            (const[2], vals[2]),
+        )
     else:
         store = index.ops
-        c1, c2 = pp, ps
-    depth = 1 + (1 if c1 >= 0 else 0) + (1 if (c1 >= 0 and c2 >= 0) else 0)
+        (c1_const, c1_val), (c2_const, c2_val) = (
+            (const[1], vals[1]),
+            (const[0], vals[0]),
+        )
+    depth = 1 + (1 if c1_const else 0) + (1 if (c1_const and c2_const) else 0)
 
     b = bound_vals.shape[0]
     cap = store.capacity
+    zero = jnp.zeros((), jnp.int32)
     prefix = jnp.stack(
         [
             bound_vals,
-            jnp.full((b,), max(c1, 0), jnp.int32),
-            jnp.full((b,), max(c2, 0), jnp.int32),
+            jnp.broadcast_to(c1_val if c1_const else zero, (b,)),
+            jnp.broadcast_to(c2_val if c2_const else zero, (b,)),
         ],
         axis=1,
     )
@@ -109,12 +144,11 @@ def probe(
     idx = start[:, None] + offs[None, :]
     rows = jnp.take(store.spo, jnp.clip(idx, 0, cap - 1), axis=0)
     valid = (idx < end[:, None]) & (bound_vals != PAD)[:, None]
-    if bound_slot == 2:  # un-permute OPS rows back to (s, p, o)
+    if bound_slot == 2:
         rows = rows[..., jnp.array([2, 1, 0])]
-    # post-filter every constant slot + the bound slot (covers prefix gaps)
-    for k, c in enumerate((ps, pp, po)):
-        if c >= 0:
-            valid = valid & (rows[..., k] == c)
+    for k in range(3):
+        if const[k]:
+            valid = valid & (rows[..., k] == vals[k])
     valid = valid & (rows[..., bound_slot] == bound_vals[:, None])
     return rows, valid
 
@@ -134,6 +168,7 @@ def make_side_evaluator(
     probe_impl: Callable | None = None,
     table_reduce: Callable[[jax.Array], jax.Array] | None = None,
     dedup_candidates: int = 0,
+    dynamic_patterns: bool = False,
 ) -> Callable[[TripleStore, TripleIndex], SideResult]:
     """Build the jitted one-side evaluator for a compiled interest.
 
@@ -141,7 +176,15 @@ def make_side_evaluator(
     (core/distributed.py): the sharded evaluator swaps in an all_to_all
     routed probe and an OR-all-reduce over the signature tables; the local
     evaluator uses :func:`probe` and identity.
+
+    ``dynamic_patterns=True`` builds the evaluator for the broker's batched
+    cohort path: the returned callable takes the pattern *values* as a
+    traced ``patterns`` argument (probes route through :func:`probe_dyn`)
+    so a whole cohort of same-shape interests can be vmapped; ``plan`` then
+    only supplies the static structure (kinds, slots, const masks).
     """
+    if dynamic_patterns and probe_impl is not None:
+        raise ValueError("dynamic_patterns is incompatible with probe_impl")
     matcher = matcher or kops.pattern_bitmask
     probe_impl = probe_impl or probe
     table_reduce = table_reduce or (lambda t: t)
@@ -193,11 +236,36 @@ def make_side_evaluator(
         cv: [e for e in edge_js if cvar[e] == cv] for cv in range(n_children)
     }
 
-    def evaluate(m: TripleStore, tgt: TripleIndex) -> SideResult:
+    def evaluate(
+        m: TripleStore,
+        tgt: TripleIndex,
+        bits: jax.Array | None = None,
+        patterns: jax.Array | None = None,
+    ) -> SideResult:
+        """Classify one changeset side.
+
+        ``bits`` (optional) is a precomputed uint32[N] pattern bitset in this
+        plan's local numbering — the broker's fused path computes one bank
+        bitset per changeset side and routes lanes here, skipping the
+        per-interest matcher pass. Must equal ``matcher(m.spo, patterns)``.
+
+        ``patterns`` (dynamic_patterns mode only) carries the traced
+        (n_total, 3) pattern values for this cohort member.
+        """
+        pats = patterns if patterns is not None else patterns_dev
+
+        def run_probe(j: int, bound_slot: int, bound_vals: jax.Array):
+            if dynamic_patterns:
+                return probe_dyn(
+                    tgt, plan.patterns[j], pats[j], bound_slot, bound_vals, K
+                )
+            return probe_impl(tgt, plan.patterns[j], bound_slot, bound_vals, K)
+
         spo = m.spo
         n = m.capacity
         valid_row = spo[:, 0] != PAD
-        bits = matcher(spo, patterns_dev)
+        if bits is None:
+            bits = matcher(spo, pats)
         # repeated-variable-in-pattern equality constraints
         for j, eq in enumerate(plan.eq_pairs):
             if eq is not None:
@@ -231,7 +299,7 @@ def make_side_evaluator(
             # upward probes: child-star M bindings -> τ edge rows -> roots
             for j in child_all_stars[cvar[e]]:
                 c_vec = jnp.where(bit(j), spo[:, anchor[j]], PAD)
-                rows, val = probe_impl(tgt, plan.patterns[e], cslot[e], c_vec, K)
+                rows, val = run_probe(e, cslot[e], c_vec)
                 rows_f = rows.reshape(-1, 3)
                 val_f = val.reshape(-1)
                 b_f = rows_f[:, anchor[e]]
@@ -247,7 +315,7 @@ def make_side_evaluator(
 
         # -- downward edge probes (per edge, for every root candidate) -----
         for e in edge_js:
-            rows, val = probe_impl(tgt, plan.patterns[e], anchor[e], root_cand, K)
+            rows, val = run_probe(e, anchor[e], root_cand)
             rows_f = rows.reshape(-1, 3)
             val_f = val.reshape(-1)
             edge_pool[e].append(
@@ -274,14 +342,14 @@ def make_side_evaluator(
         for j in child_js:
             cv = cvar[j]
             bound = child_cand[cv]
-            rows, val = probe_impl(tgt, plan.patterns[j], anchor[j], bound, K)
+            rows, val = run_probe(j, anchor[j], bound)
             pull_entries.append(("child", j, cv, bound, rows, val))
             found = jnp.any(val, axis=1)
             sat_tgt = sat_tgt.at[jnp.where(found, bound, R), j].max(
                 True, mode="drop"
             )
         for j in root_js:
-            rows, val = probe_impl(tgt, plan.patterns[j], anchor[j], root_cand, K)
+            rows, val = run_probe(j, anchor[j], root_cand)
             pull_entries.append(("root", j, -1, root_cand, rows, val))
             found = jnp.any(val, axis=1)
             sat_tgt = sat_tgt.at[jnp.where(found, root_cand, R), j].max(

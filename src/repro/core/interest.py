@@ -105,6 +105,55 @@ class CompiledInterest:
         ]
 
 
+@dataclasses.dataclass(frozen=True)
+class PatternBank:
+    """Consolidated triple-pattern bank shared by many compiled interests.
+
+    Distinct (s, p, o) pattern rows across all registered interests are
+    deduplicated into one bank; each plan keeps a static lane map from its
+    local pattern index to the bank lane carrying that pattern's match bit.
+    A pattern shared by K interests is evaluated once per changeset pass and
+    its bit fanned out K ways (kernels.ops.lane_bits). Per-pattern
+    constraints that are *not* functions of the raw (s, p, o) row alone —
+    the repeated-variable ``eq_pairs`` masks — stay per-plan downstream, so
+    dedup by row is exact.
+    """
+
+    patterns: np.ndarray  # (n_lanes, 3) int32; -1 where the slot is a variable
+    lanes: Tuple[Tuple[int, ...], ...]  # per plan: local pattern j -> bank lane
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.patterns.shape[0])
+
+    @property
+    def n_words(self) -> int:
+        """uint32 bitset words needed to carry every lane (chunking unit)."""
+        return max(1, -(-self.n_lanes // 32))
+
+
+def build_pattern_bank(plans: Sequence[CompiledInterest]) -> PatternBank:
+    """Dedup the patterns of many plans into one bank with lane maps."""
+    table: Dict[Tuple[int, int, int], int] = {}
+    rows: List[Tuple[int, int, int]] = []
+    lanes: List[Tuple[int, ...]] = []
+    for plan in plans:
+        local: List[int] = []
+        for j in range(plan.n_total):
+            key = (
+                int(plan.patterns[j, 0]),
+                int(plan.patterns[j, 1]),
+                int(plan.patterns[j, 2]),
+            )
+            if key not in table:
+                table[key] = len(rows)
+                rows.append(key)
+            local.append(table[key])
+        lanes.append(tuple(local))
+    pat = np.asarray(rows, dtype=np.int32).reshape(len(rows), 3)
+    return PatternBank(patterns=pat, lanes=tuple(lanes))
+
+
 class InterestCompileError(ValueError):
     pass
 

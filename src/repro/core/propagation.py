@@ -77,6 +77,51 @@ class StepCapacities:
         )
 
 
+def combine_side_results(
+    d_res: SideResult,
+    a_res: SideResult,
+    tau: TripleStore,
+    rho: TripleStore,
+    caps: StepCapacities,
+    extra_overflow,
+) -> Tuple[TripleStore, TripleStore, EvalOutputs]:
+    """Combine the two side evaluations into Δ(τ), Δ(ρ), Υ (Defs 16-18).
+
+    Shared by the single-interest step and the multi-subscriber broker's
+    fused step (:mod:`repro.core.broker`) so both paths are the same traced
+    computation — the broker's per-subscriber outputs stay bit-identical to
+    N independent :func:`make_interest_step` runs by construction.
+    """
+    a_cap = caps.n_i + caps.pulls
+    r, r_i, r_prime = d_res.interesting, d_res.potential, d_res.pulls
+    a, ovf_a = union(a_res.interesting, a_res.pulls, a_cap)
+    a_i = a_res.potential
+
+    # Υ (Def 18): target first removes r ∪ r', then adds a
+    tau1 = difference(difference(tau, r), r_prime)
+    tau1, ovf_t = union(tau1, a, caps.tau)
+
+    # ρ' = ((ρ \ r_i) ∪ a_i ∪ r') \ a   (promotion fix)
+    rho1 = difference(rho, r_i)
+    rho1, ovf_r1 = union(rho1, a_i, caps.rho)
+    rho1, ovf_r2 = union(rho1, r_prime, caps.rho)
+    rho1 = difference(rho1, a)
+
+    overflow = (
+        d_res.overflow
+        | a_res.overflow
+        | extra_overflow
+        | ovf_a
+        | ovf_t
+        | ovf_r1
+        | ovf_r2
+    )
+    out = EvalOutputs(
+        r=r, r_i=r_i, r_prime=r_prime, a=a, a_i=a_i, overflow=overflow
+    )
+    return tau1, rho1, out
+
+
 def make_interest_step(
     plan: CompiledInterest,
     *,
@@ -103,8 +148,6 @@ def make_interest_step(
         matcher=matcher,
         dedup_candidates=caps.dedup_candidates,
     )
-    a_cap = caps.n_i + caps.pulls
-
     @jax.jit
     def step(
         d_set: TripleStore,
@@ -116,34 +159,7 @@ def make_interest_step(
         d_res = eval_d(d_set, tgt)
         i_set, ovf_i = union(a_set, rho, caps.n_i)
         a_res = eval_a(i_set, tgt)
-
-        r, r_i, r_prime = d_res.interesting, d_res.potential, d_res.pulls
-        a, ovf_a = union(a_res.interesting, a_res.pulls, a_cap)
-        a_i = a_res.potential
-
-        # Υ (Def 18): target first removes r ∪ r', then adds a
-        tau1 = difference(difference(tau, r), r_prime)
-        tau1, ovf_t = union(tau1, a, caps.tau)
-
-        # ρ' = ((ρ \ r_i) ∪ a_i ∪ r') \ a   (promotion fix)
-        rho1 = difference(rho, r_i)
-        rho1, ovf_r1 = union(rho1, a_i, caps.rho)
-        rho1, ovf_r2 = union(rho1, r_prime, caps.rho)
-        rho1 = difference(rho1, a)
-
-        overflow = (
-            d_res.overflow
-            | a_res.overflow
-            | ovf_i
-            | ovf_a
-            | ovf_t
-            | ovf_r1
-            | ovf_r2
-        )
-        out = EvalOutputs(
-            r=r, r_i=r_i, r_prime=r_prime, a=a, a_i=a_i, overflow=overflow
-        )
-        return tau1, rho1, out
+        return combine_side_results(d_res, a_res, tau, rho, caps, ovf_i)
 
     return step
 

@@ -47,6 +47,79 @@ def pattern_bitmask(spo: jax.Array, patterns: jax.Array, *, use_kernel: bool | N
     return out[:n]
 
 
+def pattern_bitmask_words(
+    spo: jax.Array,
+    patterns,
+    *,
+    matcher=None,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """uint32[N, W] chunked bitset over an arbitrary-size pattern bank.
+
+    The triple_match kernel emits one uint32 bitset lane per pattern, capping
+    a single pass at 32 patterns. A multi-interest pattern bank can exceed
+    that, so the bank is split into ``W = ceil(P / 32)`` words: word ``w``
+    holds the match bits for ``patterns[32w : 32w + 32]``. Each word is one
+    fused matcher pass over ``spo`` — W HBM passes total, independent of how
+    many interests share the bank.
+
+    ``matcher`` (optional) must have the :func:`pattern_bitmask` signature;
+    the broker threads its distribution/testing hook through here so the
+    fused path and the per-interest path route through the same primitive.
+    """
+    if matcher is None:
+        def matcher(s, p):
+            return pattern_bitmask(s, p, use_kernel=use_kernel)
+    n_pat = patterns.shape[0]
+    n_words = max(1, -(-n_pat // 32))
+    words = []
+    for w in range(n_words):
+        chunk = patterns[w * 32 : (w + 1) * 32]
+        if chunk.shape[0] == 0:
+            words.append(jnp.zeros((spo.shape[0],), jnp.uint32))
+        else:
+            words.append(matcher(spo, chunk))
+    return jnp.stack(words, axis=1)
+
+
+def lane_bits(words: jax.Array, lanes) -> jax.Array:
+    """Route bank bitset lanes back to one plan's local pattern numbering.
+
+    ``words``: uint32[N, W] from :func:`pattern_bitmask_words` over a shared
+    pattern bank. ``lanes``: static sequence mapping this plan's local
+    pattern index ``j`` to its bank lane. Returns uint32[N] with bit ``j``
+    set iff bank lane ``lanes[j]`` is set — i.e. exactly what
+    ``pattern_bitmask(spo, plan.patterns)`` would have produced.
+    """
+    acc = jnp.zeros((words.shape[0],), dtype=jnp.uint32)
+    for j, lane in enumerate(lanes):
+        lane = int(lane)
+        bit = (words[:, lane // 32] >> np.uint32(lane % 32)) & np.uint32(1)
+        acc = acc | (bit << np.uint32(j))
+    return acc
+
+
+def lane_bits_batched(words: jax.Array, lanes_arr: jax.Array) -> jax.Array:
+    """Batched lane routing for a subscriber cohort.
+
+    ``words``: uint32[N, R, W] bank bitset words (per cohort member, per
+    triple row). ``lanes_arr``: int32[N, nt] — member ``k``'s local pattern
+    ``j`` reads bank lane ``lanes_arr[k, j]``. Returns uint32[N, R] local
+    bitsets: the vectorized equivalent of calling :func:`lane_bits` once per
+    member, used by the broker's vmapped cohort evaluation.
+    """
+    n, r, _ = words.shape
+    nt = lanes_arr.shape[1]
+    word_idx = jnp.broadcast_to((lanes_arr // 32)[:, None, :], (n, r, nt))
+    shift = (lanes_arr % 32).astype(jnp.uint32)[:, None, :]
+    g = jnp.take_along_axis(words, word_idx, axis=2)
+    bits = ((g >> shift) & jnp.uint32(1)) << jnp.arange(
+        nt, dtype=jnp.uint32
+    )[None, None, :]
+    # lanes occupy disjoint local bit positions, so sum == bitwise OR
+    return jnp.sum(bits, axis=2, dtype=jnp.uint32)
+
+
 def merge_probe(
     store: jax.Array,
     queries: jax.Array,

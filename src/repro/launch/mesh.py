@@ -16,22 +16,24 @@ ICI_BW = 50e9  # bytes/s per link
 CHIPS_PER_POD = 256
 
 
+def _auto_mesh(shape, axes):
+    """jax.make_mesh with AxisType.Auto where supported (jax >= 0.5)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-host-device tests (8 host devices)."""
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _auto_mesh((n_data, n_model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -1,0 +1,18 @@
+"""Shared test configuration.
+
+``hypothesis`` is an *optional* dev dependency (see requirements-dev.txt):
+the property-test modules (test_kernels.py, test_properties.py,
+test_broker_properties.py) guard themselves with
+``pytest.importorskip("hypothesis")`` at import time, so without it they are
+reported as **skipped** instead of failing collection.
+
+This conftest additionally puts ``src/`` on ``sys.path`` so
+``python -m pytest`` works from the repo root even without
+``PYTHONPATH=src``.
+"""
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -66,8 +66,16 @@ def test_prefill_decode_smoke(arch):
                                   "gemma3-4b"])
 def test_decode_matches_prefill(arch):
     """Teacher-forcing consistency: step-by-step decode logits == full-seq
-    forward logits at the same positions (the strictest cache test)."""
-    cfg = get_smoke_config(arch)
+    forward logits at the same positions (the strictest cache test).
+
+    Run in float32: cache correctness is exact there (<= 3e-6 across every
+    arch), whereas bfloat16 accumulation-order differences between the two
+    paths reach ~0.03 on the SSM hybrids — precision noise that forced a
+    tolerance loose enough to mask real cache bugs.
+    """
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
     api = build_model(cfg)
     rng = np.random.default_rng(2)
     params = api.init(jax.random.key(2))
@@ -92,8 +100,8 @@ def test_decode_matches_prefill(arch):
     np.testing.assert_allclose(
         np.asarray(step_logits[:, : cfg.vocab]),
         np.asarray(full_logits[:, : cfg.vocab]),
-        rtol=2e-2,
-        atol=2e-2,
+        rtol=1e-4,
+        atol=1e-4,
     )
 
 

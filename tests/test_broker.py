@@ -1,0 +1,270 @@
+"""Broker golden tests: the fused multi-subscriber pass is bit-identical to
+independent per-interest engine runs on the paper's running example
+(Definitions 13-18, Examples 1-9), plus deterministic pattern-bank /
+lane-routing checks including the >32-lane chunked path.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    IrapEngine,
+    StepCapacities,
+    build_pattern_bank,
+    compile_interest,
+    to_set,
+)
+from repro.kernels import ops, ref
+
+A = "rdf:type"
+
+CAPS = StepCapacities(n_removed=16, n_added=16, tau=64, rho=64, pulls=32)
+
+
+@pytest.fixture()
+def paper_setup():
+    d = Dictionary()
+    # Subscriber 1: the paper's running interest (Example 2)
+    athlete = InterestExpr.parse(
+        source="http://live.dbpedia.org/changesets",
+        target="http://localhost:3030/athlete/sparql",
+        bgp=[("?a", A, "dbo:Athlete"), ("?a", "dbp:goals", "?goals")],
+        ogp=[("?a", "foaf:homepage", "?page")],
+    )
+    # Subscriber 2: shares the type pattern with subscriber 1 (bank dedup)
+    types_only = InterestExpr.parse(
+        source="http://live.dbpedia.org/changesets",
+        target="http://localhost:3030/types/sparql",
+        bgp=[("?a", A, "dbo:Athlete")],
+    )
+    # Subscriber 3: object-subject join, disjoint patterns
+    teams = InterestExpr.parse(
+        source="http://live.dbpedia.org/changesets",
+        target="http://localhost:3030/teams/sparql",
+        bgp=[("?x", "dbo:team", "?t"), ("?t", A, "dbo:Team")],
+    )
+    tau0 = [
+        ("dbr:Marcel", A, "dbo:Athlete"),
+        ("dbr:Cristiano_Ronaldo", A, "dbo:Athlete"),
+        ("dbr:Cristiano_Ronaldo", "dbp:goals", "96"),
+        ("dbr:Cristiano_Ronaldo", "foaf:homepage", '"http://cristianoronaldo.com"'),
+    ]
+    removed = [
+        ("dbr:Marcel", "dbp:goals", "1"),
+        ("dbr:Marcel", "dbo:team", "dbr:FNFT"),
+        ("dbr:Tim%02", "foaf:name", '"Tim Berners-Lee"'),
+        ("dbr:Cristiano_Ronaldo", "dbp:goals", "96"),
+    ]
+    added = [
+        ("dbr:Cristiano_Ronaldo", "dbp:goals", "216"),
+        ("dbr:Barack_Obama", "foaf:name", '"Barack Obama"'),
+        ("dbr:Barack_Obama", "foaf:homepage", '"http://www.barackobama.com/"'),
+        ("dbr:Rio_Ferdinand", A, "foaf:Person"),
+        ("dbr:Rio_Ferdinand", A, "dbo:Athlete"),
+        ("dbr:Rio_Ferdinand", "dbp:goals", "10"),
+        ("dbr:Arvid_Smit", A, "dbo:Athlete"),
+        ("dbr:FNFT", A, "dbo:Team"),
+    ]
+    return (
+        d,
+        [athlete, types_only, teams],
+        d.encode_triples(tau0),
+        d.encode_triples(removed),
+        d.encode_triples(added),
+    )
+
+
+def assert_store_identical(got, want, label):
+    assert np.array_equal(np.asarray(got.spo), np.asarray(want.spo)), label
+    assert int(got.n) == int(want.n), label
+
+
+def test_broker_parity_paper_example(paper_setup):
+    """3 subscribers through the broker == 3 independent make_interest_step
+    runs: r, r_i, r', a, a_i and the updated τ / ρ match exactly."""
+    d, exprs, tau0, removed, added = paper_setup
+
+    broker = Broker(d)
+    for e in exprs:
+        broker.subscribe(e, CAPS, initial_target=tau0)
+
+    engine = IrapEngine(d)
+    seed_subs = [
+        engine.register_interest(e, CAPS, initial_target=tau0) for e in exprs
+    ]
+
+    # the shared rdf:type-Athlete pattern occupies one deduplicated lane
+    assert broker.subs  # registration happened
+    fused_outs = broker.process_changeset(removed, added)
+    assert broker.bank.n_lanes < sum(s.plan.n_total for s in broker.subs)
+
+    seed_outs = [s.apply(removed, added) for s in seed_subs]
+    for k, (got, want) in enumerate(zip(fused_outs, seed_outs)):
+        for field in ("r", "r_i", "r_prime", "a", "a_i"):
+            assert_store_identical(
+                getattr(got, field), getattr(want, field), (k, field)
+            )
+        assert bool(got.overflow) == bool(want.overflow)
+        assert_store_identical(broker.subs[k].tau, seed_subs[k].tau, (k, "tau"))
+        assert_store_identical(broker.subs[k].rho, seed_subs[k].rho, (k, "rho"))
+
+
+def test_broker_parity_over_stream(paper_setup):
+    """Parity holds across multiple changesets (ρ promotion included)."""
+    d, exprs, tau0, removed, added = paper_setup
+    broker = Broker(d)
+    engine = IrapEngine(d)
+    for e in exprs:
+        broker.subscribe(e, CAPS, initial_target=tau0)
+    seed_subs = [
+        engine.register_interest(e, CAPS, initial_target=tau0) for e in exprs
+    ]
+
+    changesets = [
+        (removed, added),
+        (np.zeros((0, 3), np.int32),
+         d.encode_triples([("dbr:Arvid_Smit", "dbp:goals", "3")])),
+        (d.encode_triples([("dbr:Rio_Ferdinand", "dbp:goals", "10")]),
+         np.zeros((0, 3), np.int32)),
+    ]
+    for d_np, a_np in changesets:
+        fused_outs = broker.process_changeset(d_np, a_np)
+        for k, sub in enumerate(seed_subs):
+            want = sub.apply(d_np, a_np)
+            got = fused_outs[k]
+            for field in ("r", "r_i", "r_prime", "a", "a_i"):
+                assert_store_identical(
+                    getattr(got, field), getattr(want, field), (k, field)
+                )
+            assert_store_identical(broker.subs[k].tau, sub.tau, (k, "tau"))
+            assert_store_identical(broker.subs[k].rho, sub.rho, (k, "rho"))
+
+
+def test_broker_subscribe_midstream(paper_setup):
+    """Subscribing after changesets have flowed re-banks and stays correct."""
+    d, exprs, tau0, removed, added = paper_setup
+    broker = Broker(d)
+    broker.subscribe(exprs[0], CAPS, initial_target=tau0)
+    broker.process_changeset(removed, added)
+    rejits_before = broker.rejit_count
+
+    broker.subscribe(exprs[2], CAPS)
+    outs = broker.process_changeset(
+        np.zeros((0, 3), np.int32),
+        d.encode_triples([("dbr:X", "dbo:team", "dbr:FNFT")]),
+    )
+    assert broker.rejit_count == rejits_before + 1
+    assert len(outs) == 2
+    # new team edge is potentially interesting for the teams subscriber
+    assert to_set(outs[1].a_i) == {
+        tuple(int(x) for x in d.encode_triples(
+            [("dbr:X", "dbo:team", "dbr:FNFT")])[0])
+    }
+
+
+def test_broker_per_subscriber_overflow_growth(paper_setup):
+    """Overflow on one subscriber doubles only that subscriber's caps."""
+    d, exprs, tau0, removed, added = paper_setup
+    tiny = StepCapacities(n_removed=16, n_added=16, tau=4, rho=4, pulls=4)
+    broker = Broker(d)
+    broker.subscribe(exprs[0], tiny, initial_target=tau0)  # will overflow
+    broker.subscribe(exprs[1], CAPS, initial_target=tau0)
+    broker.process_changeset(removed, added)
+    assert broker.subs[0].caps.tau > tiny.tau  # grew
+    assert broker.subs[1].caps.tau == CAPS.tau  # untouched
+
+    # and the grown state still matches an independent run
+    engine = IrapEngine(d)
+    sub = engine.register_interest(exprs[0], CAPS, initial_target=tau0)
+    sub.apply(removed, added)
+    assert to_set(broker.subs[0].tau) == to_set(sub.tau)
+    assert to_set(broker.subs[0].rho) == to_set(sub.rho)
+
+
+# ---------------------------------------------------------------------------
+# pattern bank + lane routing (deterministic; hypothesis variants live in
+# test_broker_properties.py)
+# ---------------------------------------------------------------------------
+
+def test_pattern_bank_dedup():
+    d = Dictionary()
+    e1 = InterestExpr.parse(
+        "g", "t1", bgp=[("?a", A, "dbo:Athlete"), ("?a", "dbp:goals", "?g")]
+    )
+    e2 = InterestExpr.parse(
+        "g", "t2", bgp=[("?b", A, "dbo:Athlete"), ("?b", "foaf:name", "?n")]
+    )
+    plans = [compile_interest(e, d) for e in (e1, e2)]
+    bank = build_pattern_bank(plans)
+    # "?x rdf:type dbo:Athlete" encodes identically for ?a and ?b -> shared
+    assert bank.n_lanes == 3
+    assert bank.lanes[0] == (0, 1)
+    assert bank.lanes[1] == (0, 2)
+    for k, plan in enumerate(plans):
+        np.testing.assert_array_equal(
+            bank.patterns[list(bank.lanes[k])], plan.patterns
+        )
+
+
+def test_lane_bits_roundtrip_chunked():
+    """pattern_bitmask_words + lane_bits == per-plan pattern_bitmask, across
+    a >32-lane bank (two bitset words)."""
+    rng = np.random.default_rng(0)
+    spo = jnp.asarray(rng.integers(0, 6, size=(64, 3)), jnp.int32)
+    # 40 distinct patterns -> 2 words
+    pats = np.full((40, 3), -1, np.int32)
+    pats[:, 1] = np.arange(40) % 6
+    pats[::3, 2] = np.arange(len(pats[::3])) % 6
+    pats[5] = pats[37]  # duplicates collapse via the bank, not here
+    bank_words = ops.pattern_bitmask_words(spo, jnp.asarray(pats))
+    assert bank_words.shape == (64, 2)
+    # a "plan" drawing lanes from both words, out of order
+    lanes = (0, 37, 5, 33, 12, 39)
+    local = ops.lane_bits(bank_words, lanes)
+    want = ref.pattern_bitmask_ref(spo, jnp.asarray(pats[list(lanes)]))
+    np.testing.assert_array_equal(np.asarray(local), np.asarray(want))
+
+
+def test_broker_chunked_bank_parity():
+    """>32 total bank lanes (chunked fused pass) stays bit-identical."""
+    d = Dictionary()
+    exprs = []
+    for i in range(12):  # 12 interests x 3 distinct patterns = 36 lanes
+        exprs.append(
+            InterestExpr.parse(
+                "g",
+                f"t{i}",
+                bgp=[(f"?a", A, f"cls:{i}"), (f"?a", f"p:{i}", "?v")],
+                ogp=[(f"?a", f"q:{i}", "?w")],
+            )
+        )
+    tau0 = d.encode_triples(
+        [(f"e:{i}", A, f"cls:{i}") for i in range(12)]
+        + [(f"e:{i}", f"q:{i}", f"w:{i}") for i in range(12)]
+    )
+    removed = d.encode_triples([(f"e:{i}", f"p:{i}", "x") for i in range(0, 12, 2)])
+    added = d.encode_triples(
+        [(f"e:{i}", f"p:{i}", "y") for i in range(12)]
+        + [("e:junk", "p:junk", "z")]
+    )
+    caps = StepCapacities(n_removed=16, n_added=32, tau=64, rho=64, pulls=64)
+
+    broker = Broker(d)
+    for e in exprs:
+        broker.subscribe(e, caps, initial_target=tau0)
+    outs = broker.process_changeset(removed, added)
+    assert broker.bank.n_lanes == 36 and broker.bank.n_words == 2
+
+    engine = IrapEngine(d)
+    for k, e in enumerate(exprs):
+        sub = engine.register_interest(e, caps, initial_target=tau0)
+        want = sub.apply(removed, added)
+        for field in ("r", "r_i", "r_prime", "a", "a_i"):
+            assert_store_identical(
+                getattr(outs[k], field), getattr(want, field), (k, field)
+            )
+        assert_store_identical(broker.subs[k].tau, sub.tau, (k, "tau"))
+        assert_store_identical(broker.subs[k].rho, sub.rho, (k, "rho"))

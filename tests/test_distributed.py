@@ -19,7 +19,6 @@ SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     import numpy as np
-    from jax.sharding import AxisType
 
     from repro.core import Dictionary, InterestExpr, from_numpy
     from repro.core.distributed import (
@@ -33,8 +32,12 @@ SCRIPT = textwrap.dedent(
     from repro.core.triples import PAD
 
     N_SHARDS = 4
-    mesh = jax.make_mesh((N_SHARDS,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    try:
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((N_SHARDS,), ("data",),
+                             axis_types=(AxisType.Auto,))
+    except ImportError:
+        mesh = jax.make_mesh((N_SHARDS,), ("data",))
 
     d = Dictionary()
     for t in ([f"s{i}" for i in range(12)] + ["type", "p0", "p1", "goals",

@@ -2,6 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+)
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
