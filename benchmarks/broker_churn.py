@@ -1,0 +1,142 @@
+"""Subscription-churn sweep: cohort-cached lifecycle vs PR 1 full rebuilds.
+
+The paper's deployment (§1, §3) is long-lived subscribers that come and go
+against a continuously-evolving source. PR 1's broker rebuilt its entire
+fused jitted step on every subscribe/unsubscribe, so under churn the system
+spent its wall-clock in XLA recompiles, not evaluation. This benchmark
+drives the same churn sequence — at ``n_subs`` subscribers, alternately
+unsubscribing and re-subscribing interests across several shape cohorts with
+changesets flowing throughout — through two brokers:
+
+  * cached   — the cohort executable cache (default): a membership change
+               recompiles at most its own cohort, and re-subscription of a
+               previously-seen shape/padded-size reuses executables outright,
+  * rebuild  — ``Broker(cache_executables=False)``: every membership change
+               discards all compiled steps (the PR 1 lifecycle).
+
+Reported: total re-jit seconds (``BrokerStats.rejit_s``) and executable
+compile counts over the churn phase, plus steady-state evaluation time.
+Emits ``experiments/bench/BENCH_churn.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only churn
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import Broker, Dictionary, InterestExpr, StepCapacities
+
+from .common import csv_row, save_json
+
+N_SHAPES = 4  # distinct static plan shapes -> distinct cohorts
+
+
+def _interest(i: int) -> InterestExpr:
+    """Interest i: shape family ``i % N_SHAPES``, patterns from a fixed
+    predicate pool so re-subscription reuses tombstoned bank lanes."""
+    cls = f"cls{i % 8}"
+    p = f"p{i % 8}"
+    shape = i % N_SHAPES
+    if shape == 0:
+        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
+        ogp = []
+    elif shape == 1:
+        bgp = [("?a", "rdf:type", cls)]
+        ogp = []
+    elif shape == 2:
+        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
+        ogp = [("?a", "foaf:page", "?w")]
+    else:
+        bgp = [("?x", p, "?a"), ("?a", "rdf:type", cls)]
+        ogp = []
+    return InterestExpr.parse(
+        source="synthetic://churn", target=f"local://sub{i}", bgp=bgp, ogp=ogp
+    )
+
+
+def _caps() -> StepCapacities:
+    return StepCapacities(
+        n_removed=64, n_added=64, tau=256, rho=128, pulls=64, fanout=4
+    )
+
+
+def _stream(d: Dictionary, n: int, seed: int = 0) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+
+    def rows(k):
+        out = []
+        for _ in range(k):
+            e = f"e{rng.integers(0, 200)}"
+            kind = rng.integers(0, 4)
+            if kind == 0:
+                out.append((e, "rdf:type", f"cls{rng.integers(0, 8)}"))
+            elif kind == 1:
+                out.append((e, f"p{rng.integers(0, 8)}", f"o{rng.integers(0, 30)}"))
+            else:
+                out.append((e, f"noise{rng.integers(0, 6)}", f"o{rng.integers(0, 30)}"))
+        return d.encode_triples(out)
+
+    return [(rows(16), rows(24)) for _ in range(n)]
+
+
+def _run_churn(
+    d: Dictionary, n_subs: int, n_events: int, cache: bool
+) -> dict:
+    """Warm a broker at ``n_subs`` subscribers, then churn membership."""
+    stream = _stream(d, 2 + 2 * n_events)
+    broker = Broker(d, cache_executables=cache)
+    subs = [broker.subscribe(_interest(i), _caps()) for i in range(n_subs)]
+    next_id = n_subs
+    # warm phase: compile every cohort once
+    broker.process_changeset(*stream[0])
+    broker.process_changeset(*stream[1])
+    warm_rejits = broker.rejit_count
+    warm_stats = len(broker.stats)
+
+    for ev in range(n_events):
+        victim = subs.pop(ev % len(subs))
+        broker.unsubscribe(victim)
+        broker.process_changeset(*stream[2 + 2 * ev])
+        subs.append(broker.subscribe(_interest(next_id), _caps()))
+        next_id += 1
+        broker.process_changeset(*stream[3 + 2 * ev])
+
+    churn_stats = broker.stats[warm_stats:]
+    rejit_s = sum(st.rejit_s for st in churn_stats)
+    eval_s = sum(st.elapsed_s - st.rejit_s for st in churn_stats)
+    return {
+        "cache_executables": cache,
+        "n_subscribers": n_subs,
+        "n_membership_changes": 2 * n_events,
+        "warm_compiles": warm_rejits,
+        "churn_compiles": broker.rejit_count - warm_rejits,
+        "churn_rejit_s": rejit_s,
+        "churn_eval_s_per_changeset": eval_s / max(1, len(churn_stats)),
+        "bank_lanes": broker.bank.n_lanes,
+        "bank_lanes_live": broker.bank.n_live,
+    }
+
+
+def run(scale: float = 1.0, n_subs: int = 32, n_events: int = 4) -> str:
+    cached = _run_churn(Dictionary(), n_subs, n_events, cache=True)
+    rebuild = _run_churn(Dictionary(), n_subs, n_events, cache=False)
+    ratio_s = rebuild["churn_rejit_s"] / max(1e-9, cached["churn_rejit_s"])
+    ratio_n = rebuild["churn_compiles"] / max(1, cached["churn_compiles"])
+    save_json(
+        "BENCH_churn",
+        {
+            "cached": cached,
+            "full_rebuild_baseline": rebuild,
+            "rejit_s_ratio": ratio_s,
+            "compile_count_ratio": ratio_n,
+            "scale": scale,
+        },
+    )
+    return csv_row(
+        "broker_churn",
+        cached["churn_eval_s_per_changeset"] * 1e6,
+        f"rejit_x={ratio_s:.1f};compiles {cached['churn_compiles']}"
+        f"vs{rebuild['churn_compiles']};subs={n_subs}",
+    )

@@ -20,7 +20,8 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from . import broker_scaling, fig4_growth, kernels_micro, table1_changesets
+    from . import broker_churn, broker_scaling, fig4_growth, kernels_micro
+    from . import table1_changesets
     from . import table23_interest_eval as t23
 
     benches = {
@@ -31,6 +32,7 @@ def main() -> None:
         "kernel_triple_match": kernels_micro.run_triple_match,
         "kernel_merge_probe": kernels_micro.run_merge_probe,
         "broker_scaling": lambda: broker_scaling.run(args.scale),
+        "broker_churn": lambda: broker_churn.run(args.scale),
     }
     print("name,us_per_call,derived")
     failures = []

@@ -7,10 +7,18 @@ Public API:
   make_interest_step / IrapEngine            (repro.core.propagation)
   Broker / make_broker_step                  (repro.core.broker)
 """
-from .broker import Broker, BrokerStats, BrokerSubscription, make_broker_step
+from .broker import (
+    Broker,
+    BrokerStats,
+    BrokerSubscription,
+    PushPolicy,
+    make_broker_step,
+    make_cohort_step,
+)
 from .dictionary import Dictionary, parse_triples
 from .interest import (
     CompiledInterest,
+    IncrementalPatternBank,
     InterestExpr,
     PatternBank,
     TriplePattern,
@@ -18,11 +26,13 @@ from .interest import (
     compile_interest,
 )
 from .propagation import (
+    ChangesetBatch,
     ChangesetStats,
     EvalOutputs,
     InterestSubscription,
     IrapEngine,
     StepCapacities,
+    compose_changesets,
     make_interest_step,
 )
 from .triples import (
@@ -45,16 +55,21 @@ __all__ = [
     "Broker",
     "BrokerStats",
     "BrokerSubscription",
+    "PushPolicy",
     "make_broker_step",
+    "make_cohort_step",
     "Dictionary",
     "parse_triples",
     "CompiledInterest",
+    "IncrementalPatternBank",
     "InterestExpr",
     "PatternBank",
     "TriplePattern",
     "build_pattern_bank",
     "compile_interest",
+    "ChangesetBatch",
     "ChangesetStats",
+    "compose_changesets",
     "EvalOutputs",
     "InterestSubscription",
     "IrapEngine",

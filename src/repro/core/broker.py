@@ -1,32 +1,58 @@
-"""Multi-subscriber interest broker: one fused evaluation pass per changeset.
+"""Multi-subscriber interest broker: cohort-cached fused evaluation passes.
 
-The paper's headline deployment (§1, §3) is many remote applications each
-holding an interest expression ``i_g = <τ, b, op>`` (Definition 7) against
-one authoritative source. The seed :class:`~repro.core.propagation.IrapEngine`
-serves N subscribers with N independent jitted steps — N full pattern-match
-passes over every changeset. This module amortizes the scan:
+The paper's headline deployment (§1, §3) is many long-lived remote
+applications each holding an interest expression ``i_g = <τ, b, op>``
+(Definition 7) against one continuously-evolving source. PR 1 amortized the
+per-changeset scan across subscribers with a single fused jitted step; this
+module additionally amortizes the *lifecycle*: subscribers come and go, and
+none of that churn may recompile work that belongs to other subscribers.
 
-* All registered interests compile into one :class:`PatternBank`
-  (cross-interest dedup of identical triple patterns, static lane maps —
-  :func:`repro.core.interest.build_pattern_bank`).
-* Each changeset is evaluated by a **single fused jitted step**
-  (:func:`make_broker_step`): one chunked ``triple_match`` bank pass over the
-  deleted side D (shared verbatim by every subscriber) and one over the
-  concatenation of all subscribers' added sides ``I_k = A ∪ ρ_k``
-  (Definition 14), then bitset-lane routing (``kernels.ops.lane_bits``)
-  hands each subscriber its local pattern bits.
-* Subscribers whose interests share the same static plan shape (and
-  capacities) form a **cohort** evaluated by one ``jax.vmap`` over the
-  pattern values — op count, dispatch, and compile cost scale with the
-  number of distinct interest *shapes*, not subscribers.
-* Downstream of the bitmask, every subscriber runs the *same* traced
-  computation as the single-interest path — the side evaluators of
-  :mod:`repro.core.evaluation` (π / π', Definitions 11-12) with precomputed
-  bits and traced pattern values (``probe_dyn``), and
-  :func:`repro.core.propagation.combine_side_results` for
-  Δ(τ) = <r ∪ r', a> (Def 16), Δ(ρ) = <r_i, a_i ∪ r'> (Def 17), and the
-  target update Υ (Def 18). Per-subscriber outputs are therefore
-  bit-identical to N independent :func:`make_interest_step` runs.
+The broker is three layers:
+
+1. **Cohort executable cache.** Subscribers whose interests share the same
+   static plan shape (pattern kinds/slots/const-masks, Definition 7
+   structure) and capacities form a cohort evaluated by one ``jax.vmap``
+   over the pattern *values* (:func:`make_cohort_step`). Each cohort's step
+   is compiled separately and cached under ``(plan-shape key, caps,
+   id-capacity, padded cohort size, padded target count, padded bank
+   words)``. Cohort membership is padded to power-of-two sizes with masked
+   dummy lanes (``kernels.ops.lane_bits_batched(active=...)`` zeroes their
+   bits, so they contribute nothing and cost no extra recompiles), and every
+   dynamic quantity — pattern values, lane maps, the bank array, the member
+   mask — is a *traced input*, so subscribing, unsubscribing, or growing one
+   subscriber (re)compiles at most its own cohort; every other cohort
+   reuses its cached executable.
+
+2. **Incremental pattern bank.** All registered interests dedup into one
+   :class:`~repro.core.interest.IncrementalPatternBank`: subscribing extends
+   lanes without renumbering existing ones, unsubscribing tombstones lanes
+   (reused by later subscriptions) until compaction, and the device bank
+   array is padded to power-of-two lane counts — so bank churn neither
+   invalidates unrelated cohorts' lane maps nor changes executable input
+   shapes. Per changeset there is one chunked bank bitmask pass over the
+   deleted side D shared by every cohort, and one per cohort over the
+   stacked ``I_k = A ∪ ρ_k`` sets (Definition 14); bitset-lane routing hands
+   each subscriber its local pattern bits.
+
+3. **Push scheduler.** Each subscription carries a :class:`PushPolicy`
+   (every-k-changesets, priority lane, or max-staleness, cf. the SPARQL
+   refresh-scheduling literature). The host orchestrator accumulates
+   pending changesets as composed batches (:func:`repro.core.propagation
+   .compose_changesets` — Definition 6 algebra over the device triple-set
+   ops — one batch per consumption
+   frontier), and a subscriber's cohort is routed through the fused pass only
+   when its policy fires; :meth:`Broker.flush` drains the rest. Subscribers
+   attached to one target dataset replica (``subscribe(...,
+   share_target=True)``) share a single ``build_index(τ)`` inside the
+   cohort step.
+
+Downstream of the bitmask every subscriber runs the *same* traced
+computation as the single-interest path — the side evaluators of
+:mod:`repro.core.evaluation` (π / π', Definitions 11-12) with precomputed
+bits and traced pattern values (``probe_dyn``), and
+:func:`repro.core.propagation.combine_side_results` for Δ(τ), Δ(ρ), Υ
+(Definitions 16-18) — so per-subscriber outputs stay bit-identical to N
+independent :func:`~repro.core.propagation.make_interest_step` runs.
 
 Paper-name ↔ code-name map (Definitions 13-18):
 
@@ -41,16 +67,16 @@ paper                     code
 ========================  ====================================================
 
 The host-side :class:`Broker` mirrors the iRap architecture's Interest
-Manager / Changeset Manager / Evaluator split: subscriptions register (and
-invalidate the fused step), changesets stream through
-:meth:`Broker.process_changeset`, and per-subscriber overflow doubles only
-that subscriber's capacities before a re-jit.
+Manager / Changeset Manager / Evaluator split, with compile/rebuild time
+accounted separately from evaluation time (``BrokerStats.rejit_s``).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,16 +84,28 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .dictionary import Dictionary
-from .evaluation import build_index, make_side_evaluator
+from .evaluation import (
+    build_index,
+    make_side_evaluator,
+    tree_gather,
+    tree_index,
+    tree_stack,
+)
 from .interest import (
     CompiledInterest,
+    IncrementalPatternBank,
     InterestExpr,
     PatternBank,
-    build_pattern_bank,
     compile_interest,
+    next_pow2,
 )
-from .propagation import EvalOutputs, StepCapacities, combine_side_results
-from .triples import TripleStore, empty, from_array, union
+from .propagation import (
+    ChangesetBatch,
+    EvalOutputs,
+    StepCapacities,
+    combine_side_results,
+)
+from .triples import PAD, TripleStore, empty, from_array, union
 
 
 def _plan_shape_key(plan: CompiledInterest):
@@ -90,14 +128,220 @@ def _plan_shape_key(plan: CompiledInterest):
     )
 
 
-@dataclasses.dataclass(frozen=True)
-class _Cohort:
-    """Subscribers sharing plan shape + capacities: evaluated via one vmap."""
+# ---------------------------------------------------------------------------
+# layer 3: push scheduling policy
+# ---------------------------------------------------------------------------
 
-    indices: Tuple[int, ...]
-    plan: CompiledInterest  # representative — static structure only
-    caps: StepCapacities
-    id_capacity: int
+@dataclasses.dataclass(frozen=True)
+class PushPolicy:
+    """When a subscriber's pending batch is routed through the fused pass.
+
+    Real consumers want per-subscriber cadences, not lock-step evaluation at
+    every changeset (cf. the SPARQL refresh-scheduling literature): a slow
+    replica can absorb k changesets per push, a dashboard wants every update
+    immediately, a mirror only bounds staleness.
+
+    ``every_k``           fire once k changesets are pending (1 = eager;
+                          None disables count-based firing).
+    ``max_staleness_s``   fire once this many seconds have passed since the
+                          subscriber's last push (None disables).
+    ``priority``          priority lane: fire at every changeset and run
+                          before non-priority work in the pass order.
+
+    A subscriber with nothing pending never fires; :meth:`Broker.flush`
+    drains pending batches regardless of policy.
+    """
+
+    every_k: Optional[int] = 1
+    max_staleness_s: Optional[float] = None
+    priority: bool = False
+
+    @staticmethod
+    def every(k: int) -> "PushPolicy":
+        """Batch k changesets between pushes (slow-consumer cadence)."""
+        return PushPolicy(every_k=k)
+
+    @staticmethod
+    def priority_lane() -> "PushPolicy":
+        """Evaluate at every changeset, ahead of non-priority subscribers."""
+        return PushPolicy(every_k=1, priority=True)
+
+    @staticmethod
+    def max_staleness(seconds: float) -> "PushPolicy":
+        """Fire only when the replica's staleness bound is reached."""
+        return PushPolicy(every_k=None, max_staleness_s=seconds)
+
+    def fires(self, pending: int, staleness_s: float) -> bool:
+        if pending <= 0:
+            return False
+        if self.priority:
+            return True
+        if self.every_k is not None and pending >= self.every_k:
+            return True
+        return (
+            self.max_staleness_s is not None
+            and staleness_s >= self.max_staleness_s
+        )
+
+
+# ---------------------------------------------------------------------------
+# layer 1: per-cohort jitted step
+# ---------------------------------------------------------------------------
+
+def make_cohort_step(
+    plan: CompiledInterest,
+    caps: StepCapacities,
+    id_capacity: int,
+    matcher: Optional[Callable] = None,
+) -> Callable:
+    """Build the jitted fused step for ONE shape-homogeneous cohort.
+
+    ``plan`` supplies only static structure (kinds, slots, const masks); the
+    pattern *values*, lane maps, bank array, target stores, and member mask
+    are traced inputs, so one compiled executable serves any cohort of this
+    shape — across subscription churn, bank growth, and re-subscription.
+
+    Signature (``Nc`` = padded cohort size, ``Nu`` = padded unique-target
+    count, ``W`` = padded bank words)::
+
+        step(d_set,            # TripleStore, deleted side (shared)
+             d_words,          # uint32[|D|, W] bank bitset over d_set
+             a_set,            # TripleStore, added side (shared)
+             bank_dev,         # int32[32 W, 3] padded pattern bank
+             uniq_taus,        # Nu-tuple of TripleStore — unique replicas
+             tgt_map,          # int32[Nc] member -> unique replica slot
+             rhos,             # Nc-tuple of TripleStore
+             pats,             # int32[Nc, nt, 3] pattern values per member
+             lanes,            # int32[Nc, nt] bank lane per local pattern
+             active,           # bool[Nc] member mask (False = padding lane)
+        ) -> (tau1s, rho1s, outs)   # Nc-tuples, per member
+
+    Member stores go in and come out as *tuples*: stacking for the vmap and
+    per-member unstacking happen inside the traced step, so the host pays
+    one executable call per cohort instead of O(members) eager stack/slice
+    dispatches per changeset.
+
+    ``build_index(τ)`` runs once per *unique* target replica and is fanned
+    out to members via ``tgt_map`` — subscribers attached to one target
+    dataset share the index build. Inactive (padding) members contribute
+    zero pattern bits and empty outputs.
+    """
+    eval_kw = dict(
+        id_capacity=id_capacity,
+        fanout=caps.fanout,
+        pull_capacity=caps.pulls,
+        matcher=matcher,
+        dedup_candidates=caps.dedup_candidates,
+        dynamic_patterns=True,
+    )
+    eval_d = make_side_evaluator(plan, out_capacity=caps.n_removed, **eval_kw)
+    eval_a = make_side_evaluator(plan, out_capacity=caps.n_i, **eval_kw)
+
+    @jax.jit
+    def step(
+        d_set: TripleStore,
+        d_words: jax.Array,
+        a_set: TripleStore,
+        bank_dev: jax.Array,
+        uniq_taus: Tuple[TripleStore, ...],
+        tgt_map: jax.Array,
+        rhos: Tuple[TripleStore, ...],
+        pats: jax.Array,
+        lanes: jax.Array,
+        active: jax.Array,
+    ):
+        nc = lanes.shape[0]
+        rhos_s = tree_stack(list(rhos))
+        uniq_s = tree_stack(list(uniq_taus))
+        # I_k = A ∪ ρ_k (Def 14); fused bank pass over the stacked cohort
+        i_sets, ovf_i = jax.vmap(lambda r: union(a_set, r, caps.n_i))(rhos_s)
+        i_cap = i_sets.spo.shape[1]
+        i_words = kops.pattern_bitmask_words(
+            i_sets.spo.reshape(-1, 3), bank_dev, matcher=matcher
+        ).reshape(nc, i_cap, -1)
+
+        # bitset-lane routing: bank words -> per-member local bits (padding
+        # members masked to zero so they see no candidates at all)
+        d_bits = kops.lane_bits_batched(
+            jnp.broadcast_to(d_words[None], (nc,) + d_words.shape),
+            lanes,
+            active=active,
+        )
+        a_bits = kops.lane_bits_batched(i_words, lanes, active=active)
+
+        # one build_index(τ) per unique target replica, gathered per member
+        tgts_u = jax.vmap(build_index)(uniq_s)
+        tgts = tree_gather(tgts_u, tgt_map)
+        taus = tree_gather(uniq_s, tgt_map)
+
+        d_res = jax.vmap(
+            lambda tgt, bits, p: eval_d(d_set, tgt, bits, p)
+        )(tgts, d_bits, pats)
+        a_res = jax.vmap(
+            lambda i_set, tgt, bits, p: eval_a(i_set, tgt, bits, p)
+        )(i_sets, tgts, a_bits, pats)
+        tau1, rho1, out = jax.vmap(
+            lambda dr, ar, t, r, o: combine_side_results(dr, ar, t, r, caps, o)
+        )(d_res, a_res, taus, rhos_s, ovf_i)
+        # unstack inside the trace: per-member outputs, no eager slicing
+        return (
+            tuple(tree_index(tau1, i) for i in range(nc)),
+            tuple(tree_index(rho1, i) for i in range(nc)),
+            tuple(tree_index(out, i) for i in range(nc)),
+        )
+
+    return step
+
+
+def _assemble_cohort_statics(
+    pat_rows: Sequence[np.ndarray],
+    lane_rows: Sequence[Sequence[int]],
+    tgt: Sequence[int],
+    ncp: int,
+    nt: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(tgt_map, pats, lanes, active) device inputs for one padded cohort.
+
+    Single definition of the dummy-lane encoding (zeros + active=False),
+    shared by the Broker's cached path and the frozen make_broker_step
+    wrapper so the two can never diverge.
+    """
+    nm = len(pat_rows)
+    tgt_map = np.zeros((ncp,), np.int32)
+    pats = np.zeros((ncp, nt, 3), np.int32)
+    lanes = np.zeros((ncp, nt), np.int32)
+    active = np.zeros((ncp,), bool)
+    for pos in range(nm):
+        tgt_map[pos] = tgt[pos]
+        pats[pos] = pat_rows[pos]
+        lanes[pos] = np.asarray(lane_rows[pos], np.int32)
+        active[pos] = True
+    return (
+        jnp.asarray(tgt_map),
+        jnp.asarray(pats),
+        jnp.asarray(lanes),
+        jnp.asarray(active),
+    )
+
+
+_EMPTY_STORES: Dict[int, TripleStore] = {}
+
+
+def _empty_cached(capacity: int) -> TripleStore:
+    """Shared immutable empty store per capacity (cohort padding lanes)."""
+    store = _EMPTY_STORES.get(capacity)
+    if store is None:
+        store = _EMPTY_STORES.setdefault(capacity, empty(capacity))
+    return store
+
+
+def _padded_bank_dev(patterns: np.ndarray) -> jax.Array:
+    """Pad a bank array to a power-of-two (>= 32) lane count; the padding
+    rows are all-PAD patterns that can never match a valid triple."""
+    n_pad = max(32, next_pow2(patterns.shape[0]))
+    out = np.full((n_pad, 3), PAD, np.int32)
+    out[: patterns.shape[0]] = patterns
+    return jnp.asarray(out)
 
 
 def make_broker_step(
@@ -107,143 +351,131 @@ def make_broker_step(
     id_capacities: Sequence[int],
     matcher: Optional[Callable] = None,
 ) -> Callable:
-    """Jitted fused step: (D, A, (τ_k,), (ρ_k,)) -> ((τ'_k,), (ρ'_k,), (out_k,)).
+    """(D, A, (τ_k,), (ρ_k,)) -> ((τ'_k,), (ρ'_k,), (out_k,)) for a frozen
+    subscriber set — the PR 1 entry point, now a thin composition of
+    :func:`make_cohort_step` executables over a padded bank.
 
-    One chunked bank bitmask pass over D shared by everyone, one per cohort
-    over the stacked ``I_k`` sets, then **vmapped** side evaluation +
-    Δ/Υ combine per cohort: subscribers whose interests share the same
-    static shape (pattern kinds/slots/const-masks, Definition 7 structure)
-    and capacities are batched into a single traced computation, so the
-    op count — and with it dispatch and compile cost — is per *cohort*, not
-    per subscriber. Heterogeneous subscribers degrade gracefully to
-    size-1 cohorts.
+    Kept for golden/property tests and one-shot uses; the :class:`Broker`
+    manages the same cohort steps through its executable cache instead, so
+    membership churn does not rebuild unrelated cohorts.
     """
     n_subs = len(plans)
     assert n_subs == len(caps_list) == len(id_capacities) == len(bank.lanes)
-    bank_dev = jnp.asarray(bank.patterns)
+    bank_dev = _padded_bank_dev(np.asarray(bank.patterns, np.int32))
 
-    # group subscribers into shape-homogeneous cohorts (stable order)
-    groups: dict = {}
+    groups: Dict[tuple, List[int]] = {}
     for k, (plan, caps, id_cap) in enumerate(
         zip(plans, caps_list, id_capacities)
     ):
         key = (_plan_shape_key(plan), caps, id_cap)
         groups.setdefault(key, []).append(k)
     cohorts = [
-        _Cohort(
-            indices=tuple(idxs),
-            plan=plans[idxs[0]],
-            caps=caps_list[idxs[0]],
-            id_capacity=id_capacities[idxs[0]],
-        )
+        (tuple(idxs), plans[idxs[0]], caps_list[idxs[0]], id_capacities[idxs[0]])
         for idxs in groups.values()
     ]
-
-    cohort_evals = []  # (eval_d, eval_a, pats (Nc, nt, 3), lanes (Nc, nt))
-    for c in cohorts:
-        eval_kw = dict(
-            id_capacity=c.id_capacity,
-            fanout=c.caps.fanout,
-            pull_capacity=c.caps.pulls,
-            matcher=matcher,
-            dedup_candidates=c.caps.dedup_candidates,
-            dynamic_patterns=True,
+    steps = [
+        make_cohort_step(plan, caps, id_cap, matcher=matcher)
+        for _, plan, caps, id_cap in cohorts
+    ]
+    # membership is frozen here, so the per-cohort static inputs (pattern
+    # values, lane maps, member mask, identity tgt_map: no τ sharing in the
+    # one-shot wrapper) upload once
+    statics = [
+        _assemble_cohort_statics(
+            [plans[k].patterns for k in idxs],
+            [bank.lanes[k] for k in idxs],
+            list(range(len(idxs))),
+            next_pow2(len(idxs)),
+            plan.n_total,
         )
-        eval_d = make_side_evaluator(
-            c.plan, out_capacity=c.caps.n_removed, **eval_kw
-        )
-        eval_a = make_side_evaluator(c.plan, out_capacity=c.caps.n_i, **eval_kw)
-        pats = jnp.asarray(
-            np.stack([plans[k].patterns for k in c.indices]), jnp.int32
-        )
-        lanes = jnp.asarray(
-            np.array([bank.lanes[k] for k in c.indices], np.int32)
-        )
-        cohort_evals.append((eval_d, eval_a, pats, lanes))
+        for idxs, plan, caps, _ in cohorts
+    ]
 
-    def bank_words(spo: jax.Array) -> jax.Array:
-        return kops.pattern_bitmask_words(spo, bank_dev, matcher=matcher)
-
-    def tree_stack(trees):
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-
-    def tree_index(tree, i):
-        return jax.tree.map(lambda x: x[i], tree)
-
-    @jax.jit
     def step(
         d_set: TripleStore,
         a_set: TripleStore,
         taus: Tuple[TripleStore, ...],
         rhos: Tuple[TripleStore, ...],
     ):
-        # fused pass 1: deleted side, shared by every subscriber
-        d_words = bank_words(d_set.spo)
-
+        # fused pass 1: deleted side, shared by every cohort
+        d_words = kops.pattern_bitmask_words(
+            d_set.spo, bank_dev, matcher=matcher
+        )
         tau1s = [None] * n_subs
         rho1s = [None] * n_subs
         outs = [None] * n_subs
-        for c, (eval_d, eval_a, pats, lanes) in zip(cohorts, cohort_evals):
-            nc = len(c.indices)
-            caps = c.caps
-            taus_c = tree_stack([taus[k] for k in c.indices])
-            rhos_c = tree_stack([rhos[k] for k in c.indices])
-
-            # I_k = A ∪ ρ_k (Def 14); fused pass 2 over the stacked cohort
-            i_sets, ovf_i = jax.vmap(lambda r: union(a_set, r, caps.n_i))(
-                rhos_c
+        for (idxs, plan, caps, _), fn, (tgt_map, pats, lanes, active) in zip(
+            cohorts, steps, statics
+        ):
+            nm = len(idxs)
+            ncp = next_pow2(nm)
+            taus_c = tuple(taus[k] for k in idxs) + (
+                _empty_cached(caps.tau),
+            ) * (ncp - nm)
+            rhos_c = tuple(rhos[k] for k in idxs) + (
+                _empty_cached(caps.rho),
+            ) * (ncp - nm)
+            tau1_c, rho1_c, out_c = fn(
+                d_set,
+                d_words,
+                a_set,
+                bank_dev,
+                taus_c,
+                tgt_map,
+                rhos_c,
+                pats,
+                lanes,
+                active,
             )
-            i_cap = i_sets.spo.shape[1]
-            i_words = bank_words(i_sets.spo.reshape(-1, 3)).reshape(
-                nc, i_cap, bank.n_words
-            )
-
-            # bitset-lane routing: bank words -> per-member local bits
-            d_bits = kops.lane_bits_batched(
-                jnp.broadcast_to(d_words[None], (nc,) + d_words.shape), lanes
-            )
-            a_bits = kops.lane_bits_batched(i_words, lanes)
-
-            tgts = jax.vmap(build_index)(taus_c)
-            d_res = jax.vmap(
-                lambda tgt, bits, p: eval_d(d_set, tgt, bits, p)
-            )(tgts, d_bits, pats)
-            a_res = jax.vmap(
-                lambda i_set, tgt, bits, p: eval_a(i_set, tgt, bits, p)
-            )(i_sets, tgts, a_bits, pats)
-            tau1_c, rho1_c, out_c = jax.vmap(
-                lambda dr, ar, t, r, o: combine_side_results(
-                    dr, ar, t, r, caps, o
-                )
-            )(d_res, a_res, taus_c, rhos_c, ovf_i)
-
-            for pos, k in enumerate(c.indices):
-                tau1s[k] = tree_index(tau1_c, pos)
-                rho1s[k] = tree_index(rho1_c, pos)
-                outs[k] = tree_index(out_c, pos)
+            for pos, k in enumerate(idxs):
+                tau1s[k] = tau1_c[pos]
+                rho1s[k] = rho1_c[pos]
+                outs[k] = out_c[pos]
         return tuple(tau1s), tuple(rho1s), tuple(outs)
 
     return step
 
 
 class BrokerSubscription:
-    """One registered interest inside the broker: plan, caps, τ, ρ."""
+    """One registered interest inside the broker: plan, caps, policy, τ, ρ."""
+
+    _serial_counter = itertools.count()
 
     def __init__(
-        self, expr: InterestExpr, dictionary: Dictionary, caps: StepCapacities
+        self,
+        expr: InterestExpr,
+        dictionary: Dictionary,
+        caps: StepCapacities,
+        policy: PushPolicy | None = None,
     ):
         self.expr = expr
         self.dictionary = dictionary
         self.caps = caps
+        self.policy = policy if policy is not None else PushPolicy()
+        # monotonic identity for host-side cache signatures (unlike id(),
+        # never reused after garbage collection); plan_version tracks
+        # recompiles the same way
+        self.serial = next(BrokerSubscription._serial_counter)
+        self.plan_version = 0
         self.plan = compile_interest(expr, dictionary)
         self.id_capacity = dictionary.id_capacity * caps.id_headroom
         self.tau = empty(caps.tau)
         self.rho = empty(caps.rho)
+        self.lanes: Tuple[int, ...] = ()  # bank lane map (broker-managed)
+        self.since = 1  # first unconsumed changeset id (broker-managed)
+        self.last_push_t = time.perf_counter()
+        # shared-τ lineage: subscriptions attached to one target replica
+        # share `share_tag`; `epoch` hashes the consumption history, so two
+        # subscriptions share a build_index(τ) in the cohort step exactly
+        # when their replica state is provably identical.
+        self.share_tag: object = self
+        self.epoch: int = 0
 
     def recompile(self, caps: StepCapacities | None = None) -> None:
         """Refresh plan/capacities after dictionary or capacity growth."""
         if caps is not None:
             self.caps = caps
+        self.plan_version += 1
         self.plan = compile_interest(self.expr, self.dictionary)
         self.id_capacity = self.dictionary.id_capacity * self.caps.id_headroom
         self.tau, _ = union(empty(self.caps.tau), self.tau, self.caps.tau)
@@ -265,41 +497,83 @@ class BrokerSubscription:
 
 @dataclasses.dataclass
 class BrokerStats:
-    """Per-changeset accounting for the fused pass (all subscribers)."""
+    """Per-call accounting for the fused pass (all evaluated subscribers)."""
 
     changeset_id: int
     n_subscribers: int
-    n_lanes: int  # deduplicated bank size
+    n_lanes: int  # allocated bank lanes (incl. tombstones)
     n_lanes_raw: int  # sum of per-interest pattern counts
     total_removed: int
     total_added: int
-    interesting_removed: int  # Σ_k |r_k|
-    interesting_added: int  # Σ_k |a_k|
-    elapsed_s: float
+    interesting_removed: int  # Σ_k |r_k| over evaluated subscribers
+    interesting_added: int  # Σ_k |a_k| over evaluated subscribers
+    elapsed_s: float  # wall time incl. rejit_s
+    rejit_s: float = 0.0  # executable compile / bank rebuild time
+    n_evaluated: int = 0  # subscribers whose policy fired
+    n_deferred: int = 0  # subscribers whose batch kept accumulating
+    n_cohort_passes: int = 0  # cohort executables invoked
+
+
+def _as_rows(arr) -> np.ndarray:
+    """Normalize a changeset side to an int32 (N, 3) array; empty-friendly."""
+    out = np.asarray(arr, dtype=np.int32)
+    if out.size == 0:
+        return np.zeros((0, 3), np.int32)
+    if out.ndim != 2 or out.shape[1] != 3:
+        raise ValueError(f"expected (N, 3) triples, got {out.shape}")
+    return out
 
 
 class Broker:
-    """Host orchestrator batching all registered interests into one pass.
+    """Host orchestrator batching all registered interests into fused passes.
 
     Drop-in counterpart of :class:`~repro.core.propagation.IrapEngine` for
     the many-subscriber regime: ``subscribe`` replaces ``register_interest``
-    and ``process_changeset`` evaluates every subscription with a single
-    fused jitted step instead of one step per subscription.
+    and ``process_changeset`` evaluates every *due* subscription (per its
+    :class:`PushPolicy`) through cached per-cohort executables.
+
+    ``cache_executables=False`` reproduces the PR 1 lifecycle — every
+    membership change discards all compiled steps — and exists as the
+    baseline for ``benchmarks/broker_churn.py``.
     """
 
     def __init__(
         self,
         dictionary: Dictionary | None = None,
         matcher: Optional[Callable] = None,
+        cache_executables: bool = True,
     ):
         self.dictionary = dictionary if dictionary is not None else Dictionary()
         self.matcher = matcher
         self.subs: List[BrokerSubscription] = []
         self.stats: List[BrokerStats] = []
-        self.bank: PatternBank | None = None
-        self._step: Callable | None = None
+        self.bank = IncrementalPatternBank()
+        self.cache_executables = cache_executables
+        # LRU-bounded: superseded keys (outgrown caps, old padded sizes)
+        # eventually fall out instead of holding XLA executables forever;
+        # evicting a hot key only costs a recompile, never correctness
+        self._exec_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.exec_cache_max = 128
+        # membership-static device arrays per (cohort, membership signature)
+        self._static_arrays_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # exact consumption-history interning: (epoch, first, last) -> new
+        # epoch id, so equal histories — and only equal histories — share
+        # an epoch (no probabilistic hash comparison). Only subscriptions
+        # whose share_tag is held by >= 2 members track epochs (it exists
+        # purely to group shared-τ replicas), ids are monotonic so pruning
+        # can never alias a held epoch, and unreachable entries are pruned
+        # at a size threshold.
+        self._epoch_intern: Dict[tuple, int] = {}
+        self._epoch_next = 0
+        self.epoch_intern_max = 4096
+        self._bank_dev: jax.Array | None = None
+        self._bank_version = -1
+        self._batches: Dict[int, ChangesetBatch] = {}
         self._counter = 0
-        self.rejit_count = 0  # fused-step (re)builds, for tests/benchmarks
+        self._rejit_acc = 0.0
+        self.rejit_count = 0  # executable compiles (cohort + bank words)
+        self.cohort_compiles: Dict[tuple, int] = {}  # per cohort key
+        self.words_compiles = 0  # shared D-side bank-pass compiles
 
     # -- interest manager ---------------------------------------------------
 
@@ -308,102 +582,445 @@ class Broker:
         expr: InterestExpr,
         caps: StepCapacities = StepCapacities(),
         initial_target: np.ndarray | None = None,
+        policy: PushPolicy | None = None,
+        share_target: bool = False,
     ) -> BrokerSubscription:
-        sub = BrokerSubscription(expr, self.dictionary, caps)
-        if initial_target is not None and initial_target.size:
+        """Register an interest; only its own cohort will (re)compile.
+
+        ``share_target=True`` attaches the new subscription to an existing
+        identical one (same expression, capacities, and policy) when
+        present: it adopts that replica's current τ/ρ state and the two
+        share one ``build_index(τ)`` inside the cohort step from then on —
+        the paper's many-readers-of-one-target-dataset case. Falls back to
+        an independent subscription when no compatible root exists.
+        """
+        sub = BrokerSubscription(expr, self.dictionary, caps, policy=policy)
+        sub.since = self._counter + 1
+        root = self._find_share_root(sub) if share_target else None
+        if root is not None:
+            sub.tau, sub.rho = root.tau, root.rho
+            sub.share_tag, sub.epoch = root.share_tag, root.epoch
+            sub.since, sub.last_push_t = root.since, root.last_push_t
+        elif initial_target is not None and initial_target.size:
             sub.init_target(initial_target)
+        sub.lanes = self.bank.add_plan(sub.plan)
         self.subs.append(sub)
-        self._step = None  # pattern bank changed: rebuild on next changeset
+        if not self.cache_executables:
+            self._exec_cache.clear()  # PR 1 full-rebuild baseline behavior
         return sub
 
+    def _find_share_root(
+        self, sub: BrokerSubscription
+    ) -> BrokerSubscription | None:
+        for s in self.subs:
+            if (
+                s.expr == sub.expr
+                and s.caps == sub.caps
+                and s.policy == sub.policy
+                and np.array_equal(s.plan.patterns, sub.plan.patterns)
+            ):
+                return s
+        return None
+
     def unsubscribe(self, sub: BrokerSubscription) -> None:
+        """Remove one subscription; unrelated cohorts keep their executables."""
         self.subs.remove(sub)
-        self._step = None
+        self.bank.remove_plan(sub.lanes)
+        sub.lanes = ()
+        if not self.subs:
+            # no live lane maps reference the bank: reset it outright so a
+            # later first subscription starts from a fresh, compact bank
+            self.bank = IncrementalPatternBank()
+            self._bank_version = -1
+            self._batches.clear()
+        else:
+            remap = self.bank.maybe_compact()
+            if remap is not None:
+                for s in self.subs:
+                    s.lanes = tuple(remap[l] for l in s.lanes)
+            self._gc_batches()
+        if not self.cache_executables:
+            self._exec_cache.clear()  # PR 1 full-rebuild baseline behavior
 
-    # -- fused-step lifecycle -----------------------------------------------
+    # -- executable cache ---------------------------------------------------
 
-    def _rebuild(self) -> None:
-        for sub in self.subs:
-            sub.recompile()
-        self.bank = build_pattern_bank([s.plan for s in self.subs])
-        self._step = make_broker_step(
-            self.bank,
-            [s.plan for s in self.subs],
-            [s.caps for s in self.subs],
-            [s.id_capacity for s in self.subs],
-            matcher=self.matcher,
-        )
+    def _ensure_bank_dev(self) -> jax.Array:
+        if self._bank_dev is None or self._bank_version != self.bank.version:
+            self._bank_dev = jnp.asarray(self.bank.patterns_padded())
+            self._bank_version = self.bank.version
+        return self._bank_dev
+
+    def _build_exec(self, key: tuple, builder: Callable, args: tuple):
+        """Fetch-or-compile one executable; compile time goes to rejit_s.
+
+        On a miss the step is AOT-lowered against the concrete ``args`` so
+        the recorded time is pure compilation (evaluation stays outside);
+        if ahead-of-time compilation is unavailable the jitted callable is
+        cached instead and its first call pays the compile inline.
+        """
+        fn = self._exec_cache.get(key)
+        if fn is not None:
+            self._exec_cache.move_to_end(key)
+            return fn
+        t0 = time.perf_counter()
+        jitted = builder()
+        try:
+            fn = jitted.lower(*args).compile()
+        except (AttributeError, NotImplementedError):
+            # AOT lowering unavailable on this jax/backend only — genuine
+            # compile errors must propagate. The fallback's first call pays
+            # its compile inline (inflating elapsed_s, not rejit_s).
+            fn = jitted
+        self._exec_cache[key] = fn
+        while len(self._exec_cache) > self.exec_cache_max:
+            self._exec_cache.popitem(last=False)
+        self._rejit_acc += time.perf_counter() - t0
         self.rejit_count += 1
+        return fn
 
-    def _ensure_step(self) -> None:
-        if self._step is None:
-            self._rebuild()
-            return
-        if any(
-            self.dictionary.id_capacity > s.id_capacity for s in self.subs
-        ):
-            self._rebuild()
-
-    # -- changeset manager + evaluator --------------------------------------
+    # -- changeset manager + scheduler --------------------------------------
 
     def process_changeset(
         self, removed: np.ndarray, added: np.ndarray
-    ) -> List[EvalOutputs]:
-        """Evaluate one changeset for every subscriber in one fused pass.
+    ) -> List[Optional[EvalOutputs]]:
+        """Ingest one changeset; evaluate every subscriber whose policy fires.
 
-        Returns one :class:`EvalOutputs` per subscriber, in subscription
-        order — each bit-identical to what the seed per-interest engine
-        would produce for that subscriber alone.
+        Returns one entry per subscriber, in subscription order: the
+        :class:`EvalOutputs` of its (possibly batched) evaluation — each
+        bit-identical to what the seed per-interest engine would produce for
+        the same composed changeset — or None when the subscriber's policy
+        deferred it (its pending batch keeps accumulating). An empty broker
+        and 0-row ``removed``/``added`` sides are all well-defined.
         """
+        removed, added = _as_rows(removed), _as_rows(added)
         self._counter += 1
+        cid = self._counter
         if not self.subs:
             return []
         t0 = time.perf_counter()
-        while True:
-            # host-side capacity guard (per subscriber, like the seed engine)
-            for sub in self.subs:
-                while (
-                    removed.shape[0] > sub.caps.n_removed
-                    or added.shape[0] > sub.caps.n_added
-                ):
-                    sub.recompile(sub.caps.doubled())
-                    self._step = None
-            self._ensure_step()
+        self._rejit_acc = 0.0
 
-            d_cap = max(s.caps.n_removed for s in self.subs)
-            a_cap = max(s.caps.n_added for s in self.subs)
-            d_store, _ = from_array(jnp.asarray(removed, jnp.int32), d_cap)
-            a_store, _ = from_array(jnp.asarray(added, jnp.int32), a_cap)
-            tau1s, rho1s, outs = self._step(
-                d_store,
-                a_store,
-                tuple(s.tau for s in self.subs),
-                tuple(s.rho for s in self.subs),
-            )
-            overflowed = [
-                k for k in range(len(self.subs)) if bool(outs[k].overflow)
+        # layer 3: accumulate pending batches per consumption frontier
+        for batch in self._batches.values():
+            batch.extend(removed, added, cid)
+        if cid not in self._batches and any(s.since == cid for s in self.subs):
+            self._batches[cid] = ChangesetBatch.fresh(removed, added, cid)
+
+        now = time.perf_counter()
+        fired = []
+        for k, s in enumerate(self.subs):
+            batch = self._batches.get(s.since)
+            if batch is not None and s.policy.fires(
+                batch.n_changesets, now - s.last_push_t
+            ):
+                fired.append(k)
+        results, n_passes = self._fire(fired)
+        self._gc_batches()
+        self._record_stats(
+            cid, removed, added, results, fired, n_passes, t0
+        )
+        return results
+
+    def flush(
+        self, subs: Sequence[BrokerSubscription] | None = None
+    ) -> List[Optional[EvalOutputs]]:
+        """Drain pending batches now, regardless of policy.
+
+        Evaluates every given subscription (default: all) that has at least
+        one pending changeset; returns one entry per subscriber in
+        subscription order (None where nothing was pending). Stale handles
+        (already unsubscribed) are skipped, consistent with None semantics.
+        """
+        if subs is None:
+            targets = list(range(len(self.subs)))
+        else:
+            wanted = {id(s) for s in subs}
+            targets = [
+                k for k, s in enumerate(self.subs) if id(s) in wanted
             ]
-            if overflowed:
-                # grow only the subscribers that overflowed, then re-jit
-                for k in overflowed:
-                    self.subs[k].recompile(self.subs[k].caps.doubled())
-                self._step = None
-                continue
-            for k, sub in enumerate(self.subs):
-                sub.tau, sub.rho = tau1s[k], rho1s[k]
-            jax.block_until_ready(self.subs[-1].tau.spo)
-            elapsed = time.perf_counter() - t0
-            self.stats.append(
-                BrokerStats(
-                    changeset_id=self._counter,
-                    n_subscribers=len(self.subs),
-                    n_lanes=self.bank.n_lanes,
-                    n_lanes_raw=sum(s.plan.n_total for s in self.subs),
-                    total_removed=int(removed.shape[0]),
-                    total_added=int(added.shape[0]),
-                    interesting_removed=sum(int(o.r.n) for o in outs),
-                    interesting_added=sum(int(o.a.n) for o in outs),
-                    elapsed_s=elapsed,
-                )
+        t0 = time.perf_counter()
+        self._rejit_acc = 0.0
+        fired = [k for k in targets if self.subs[k].since in self._batches]
+        results, n_passes = self._fire(fired)
+        self._gc_batches()
+        if fired:
+            z = np.zeros((0, 3), np.int32)
+            self._record_stats(
+                self._counter, z, z, results, fired, n_passes, t0
             )
-            return list(outs)
+        return results
+
+    def _fire(
+        self, fired: List[int]
+    ) -> Tuple[List[Optional[EvalOutputs]], int]:
+        results: List[Optional[EvalOutputs]] = [None] * len(self.subs)
+        if not fired:
+            return results, 0
+        groups: Dict[int, List[int]] = {}
+        for k in fired:
+            groups.setdefault(self.subs[k].since, []).append(k)
+
+        def group_order(since: int):
+            # priority lanes drain first, then oldest frontier
+            has_priority = any(
+                self.subs[k].policy.priority for k in groups[since]
+            )
+            return (not has_priority, since)
+
+        n_passes = 0
+        now = time.perf_counter()
+        tag_refs: Dict[int, int] = {}
+        for s in self.subs:
+            tag_refs[id(s.share_tag)] = tag_refs.get(id(s.share_tag), 0) + 1
+        for since in sorted(groups, key=group_order):
+            idxs = groups[since]
+            batch = self._batches[since]
+            d_np, a_np = batch.arrays()
+            outs, passes = self._evaluate_group(idxs, d_np, a_np)
+            n_passes += passes
+            for k in idxs:
+                results[k] = outs[k]
+                s = self.subs[k]
+                s.since = batch.last_id + 1
+                s.last_push_t = now
+                if tag_refs[id(s.share_tag)] > 1:
+                    hist = (s.epoch, batch.first_id, batch.last_id)
+                    epoch = self._epoch_intern.get(hist)
+                    if epoch is None:
+                        self._epoch_next += 1
+                        epoch = self._epoch_intern[hist] = self._epoch_next
+                    s.epoch = epoch
+        if len(self._epoch_intern) > self.epoch_intern_max:
+            # entries whose parent epoch no subscriber holds can never be
+            # looked up again (lookups key on a live subscriber's epoch)
+            held = {s.epoch for s in self.subs}
+            self._epoch_intern = {
+                hist: e
+                for hist, e in self._epoch_intern.items()
+                if hist[0] in held
+            }
+        return results, n_passes
+
+    def _gc_batches(self) -> None:
+        live = {s.since for s in self.subs}
+        self._batches = {
+            since: b for since, b in self._batches.items() if since in live
+        }
+
+    # -- evaluator ----------------------------------------------------------
+
+    def _static_arrays(
+        self,
+        ckey: tuple,
+        members: List[int],
+        upos: Dict[int, int],
+        ncp: int,
+        nt: int,
+    ):
+        """Membership-static device inputs for one cohort invocation.
+
+        pats / lanes / tgt_map / active change only with membership, plan
+        recompiles, bank compaction, or shared-τ regrouping — all covered by
+        the cache key below — so the steady-state path skips the per-call
+        numpy rebuild and host-to-device transfers. Keyed by the full
+        membership signature (not just the cohort), so same-shape cohorts
+        fired from different frontiers (mixed cadences) each keep their own
+        entry instead of evicting one another; the LRU bound reclaims
+        superseded signatures.
+        """
+        subs = self.subs
+        key = (
+            ckey,
+            tuple(subs[k].serial for k in members),
+            tuple(subs[k].plan_version for k in members),
+            tuple(upos[k] for k in members),
+            self.bank.version,
+        )
+        cached = self._static_arrays_cache.get(key)
+        if cached is not None:
+            self._static_arrays_cache.move_to_end(key)
+            return cached
+        arrays = _assemble_cohort_statics(
+            [subs[k].plan.patterns for k in members],
+            [subs[k].lanes for k in members],
+            [upos[k] for k in members],
+            ncp,
+            nt,
+        )
+        self._static_arrays_cache[key] = arrays
+        while len(self._static_arrays_cache) > self.exec_cache_max:
+            self._static_arrays_cache.popitem(last=False)
+        return arrays
+
+    def _evaluate_group(
+        self, idxs: List[int], d_np: np.ndarray, a_np: np.ndarray
+    ) -> Tuple[Dict[int, EvalOutputs], int]:
+        """One composed batch through every due cohort; atomic commit."""
+        subs = self.subs
+        # matcher identity is baked into compiled steps, so it must be part
+        # of every executable key (caches may be shared across brokers)
+        mkey = id(self.matcher) if self.matcher is not None else None
+        n_passes = 0  # counts abandoned overflow-retry attempts too
+        while True:
+            for k in idxs:  # host-side capacity guard (per subscriber)
+                s = subs[k]
+                while (
+                    d_np.shape[0] > s.caps.n_removed
+                    or a_np.shape[0] > s.caps.n_added
+                ):
+                    s.recompile(s.caps.doubled())
+            for k in idxs:  # dictionary growth guard
+                if self.dictionary.id_capacity > subs[k].id_capacity:
+                    subs[k].recompile()
+            bank_dev = self._ensure_bank_dev()
+            n_words_p = bank_dev.shape[0] // 32
+
+            cohorts: Dict[tuple, List[int]] = {}
+            for k in idxs:
+                s = subs[k]
+                key = (_plan_shape_key(s.plan), s.caps, s.id_capacity)
+                cohorts.setdefault(key, []).append(k)
+
+            # fused pass 1: deleted side, shared by every cohort (sliced to
+            # each cohort's capacity so per-subscriber growth stays local)
+            d_cap = max(subs[k].caps.n_removed for k in idxs)
+            d_store, _ = from_array(jnp.asarray(d_np, jnp.int32), d_cap)
+            wkey = ("words", d_cap, n_words_p, mkey)
+            miss = wkey not in self._exec_cache
+            words_fn = self._build_exec(
+                wkey,
+                lambda: jax.jit(
+                    lambda spo, b: kops.pattern_bitmask_words(
+                        spo, b, matcher=self.matcher
+                    )
+                ),
+                (d_store.spo, bank_dev),
+            )
+            if miss:
+                self.words_compiles += 1
+            d_words_all = words_fn(d_store.spo, bank_dev)
+
+            staged: Dict[int, Tuple[TripleStore, TripleStore]] = {}
+            outs: Dict[int, EvalOutputs] = {}
+            overflowed: List[int] = []
+            a_cache: Dict[int, TripleStore] = {}
+            for (skey, caps, id_cap), members in cohorts.items():
+                rep = subs[members[0]]
+                nt = rep.plan.n_total
+                # unique target replicas (shared-τ groups) in this cohort
+                ugroups: List[List[int]] = []
+                upos: Dict[int, int] = {}
+                seen: Dict[tuple, int] = {}
+                for k in members:
+                    s = subs[k]
+                    gk = (id(s.share_tag), s.epoch)
+                    if gk not in seen:
+                        seen[gk] = len(ugroups)
+                        ugroups.append([])
+                    upos[k] = seen[gk]
+                    ugroups[seen[gk]].append(k)
+                nm, nu = len(members), len(ugroups)
+                ncp, nup = next_pow2(nm), next_pow2(nu)
+
+                d_c = TripleStore(
+                    spo=d_store.spo[: caps.n_removed], n=d_store.n
+                )
+                d_words_c = d_words_all[: caps.n_removed]
+                if caps.n_added not in a_cache:
+                    a_cache[caps.n_added], _ = from_array(
+                        jnp.asarray(a_np, jnp.int32), caps.n_added
+                    )
+                a_c = a_cache[caps.n_added]
+                uniq_taus = tuple(subs[g[0]].tau for g in ugroups) + (
+                    _empty_cached(caps.tau),
+                ) * (nup - nu)
+                rhos_c = tuple(subs[k].rho for k in members) + (
+                    _empty_cached(caps.rho),
+                ) * (ncp - nm)
+                ckey = (
+                    "cohort", skey, caps, id_cap, ncp, nup, n_words_p, mkey,
+                )
+                tgt_map_d, pats_d, lanes_d, active_d = self._static_arrays(
+                    ckey, members, upos, ncp, nt
+                )
+                args = (
+                    d_c,
+                    d_words_c,
+                    a_c,
+                    bank_dev,
+                    uniq_taus,
+                    tgt_map_d,
+                    rhos_c,
+                    pats_d,
+                    lanes_d,
+                    active_d,
+                )
+                miss = ckey not in self._exec_cache
+                fn = self._build_exec(
+                    ckey,
+                    lambda: make_cohort_step(
+                        rep.plan, caps, id_cap, matcher=self.matcher
+                    ),
+                    args,
+                )
+                if miss:
+                    self.cohort_compiles[ckey] = (
+                        self.cohort_compiles.get(ckey, 0) + 1
+                    )
+                tau1_c, rho1_c, out_c = fn(*args)
+                n_passes += 1
+                for ug, g in enumerate(ugroups):
+                    pos0 = members.index(g[0])
+                    out = out_c[pos0]
+                    if bool(out.overflow):
+                        overflowed.extend(g)
+                        continue
+                    for k in g:  # shared-τ members adopt one state object
+                        outs[k] = out
+                        staged[k] = (tau1_c[pos0], rho1_c[pos0])
+
+            if overflowed:
+                # grow only the subscribers that overflowed, then re-run the
+                # whole group (staged updates are discarded: atomic commit)
+                for k in sorted(set(overflowed)):
+                    subs[k].recompile(subs[k].caps.doubled())
+                continue
+            for k, (tau1, rho1) in staged.items():
+                subs[k].tau, subs[k].rho = tau1, rho1
+            if staged:
+                # block on every cohort's output so elapsed_s covers all work
+                jax.block_until_ready(
+                    [tau1.spo for tau1, _ in staged.values()]
+                )
+            return outs, n_passes
+
+    # -- accounting ---------------------------------------------------------
+
+    def _record_stats(
+        self,
+        changeset_id: int,
+        removed: np.ndarray,
+        added: np.ndarray,
+        results: List[Optional[EvalOutputs]],
+        fired: List[int],
+        n_passes: int,
+        t0: float,
+    ) -> None:
+        evaluated = [results[k] for k in fired]
+        self.stats.append(
+            BrokerStats(
+                changeset_id=changeset_id,
+                n_subscribers=len(self.subs),
+                n_lanes=self.bank.n_lanes,
+                n_lanes_raw=sum(s.plan.n_total for s in self.subs),
+                total_removed=int(removed.shape[0]),
+                total_added=int(added.shape[0]),
+                interesting_removed=sum(int(o.r.n) for o in evaluated),
+                interesting_added=sum(int(o.a.n) for o in evaluated),
+                elapsed_s=time.perf_counter() - t0,
+                rejit_s=self._rejit_acc,
+                n_evaluated=len(fired),
+                n_deferred=len(self.subs) - len(fired),
+                n_cohort_passes=n_passes,
+            )
+        )

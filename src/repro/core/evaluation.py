@@ -53,6 +53,30 @@ def build_index(store: TripleStore) -> TripleIndex:
     return TripleIndex(spo=store, ops=TripleStore(spo=ops_rows, n=store.n))
 
 
+# ---------------------------------------------------------------------------
+# cohort pytree helpers (the broker's stacked/batched evaluation plumbing)
+# ---------------------------------------------------------------------------
+
+def tree_stack(trees):
+    """Stack identical pytrees along a new leading (cohort-member) axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_index(tree, i):
+    """Slice one member out of a leading-axis-stacked pytree."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_gather(tree, idx: jax.Array):
+    """Gather members of a stacked pytree by a (traced) index vector.
+
+    Used by the broker's shared-τ path: target indexes are built once per
+    *unique* target dataset and fanned out to every cohort member via this
+    gather, so K subscribers of one replica pay for one ``build_index``.
+    """
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["interesting", "potential", "pulls", "overflow"],

@@ -154,6 +154,146 @@ def build_pattern_bank(plans: Sequence[CompiledInterest]) -> PatternBank:
     return PatternBank(patterns=pat, lanes=tuple(lanes))
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1). The padding rule shared by
+    cohort sizes, bank lane counts, and batch capacities: power-of-two
+    shapes are what lets churn reuse cached executables."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+# A bank row that matches nothing: every slot is the PAD sentinel, which no
+# dictionary-encoded triple can carry (ids are dense and < 2**31 - 1) and
+# which the matchers additionally exclude via the valid-row mask. Used for
+# tombstoned lanes and for padding the bank to a stable device shape.
+_DEAD_ROW = (int(np.iinfo(np.int32).max),) * 3
+
+
+class IncrementalPatternBank:
+    """Mutable pattern bank with *stable* lane numbering under churn.
+
+    :func:`build_pattern_bank` assigns lanes by rebuilding the whole table,
+    so any subscription change renumbers every plan's lane map and — because
+    lane maps and the bank array feed the broker's compiled cohort steps —
+    invalidates executables that had nothing to do with the change. This
+    class makes the bank an incremental structure instead:
+
+    * ``add_plan`` dedups against the live table and extends the bank only
+      with genuinely new rows; existing lanes are never renumbered.
+    * ``remove_plan`` decrements per-lane refcounts; lanes that drop to zero
+      are *tombstoned* (their row becomes the never-matching ``_DEAD_ROW``)
+      rather than removed, so every other plan's lane map stays valid.
+      Tombstoned lanes are reused first by later ``add_plan`` calls, which
+      keeps re-subscription churn from growing the bank at all.
+    * ``maybe_compact`` renumbers only when tombstones dominate
+      (``compact_threshold``) — the caller applies the returned remap to all
+      live lane maps — so the padded device array can eventually shrink.
+
+    ``patterns_padded`` pads the lane count to a power of two (min 32, i.e.
+    whole uint32 bitset words) so the bank's *device shape* — part of every
+    cohort executable's input signature — changes only when the bank crosses
+    a power-of-two boundary, not on every subscription.
+
+    ``version`` increments whenever the padded array contents change; the
+    broker uses it to refresh its device copy cheaply.
+    """
+
+    def __init__(self, compact_threshold: float = 0.5):
+        self._table: Dict[Tuple[int, int, int], int] = {}
+        self._rows: List[Optional[Tuple[int, int, int]]] = []
+        self._refs: List[int] = []
+        self._free: List[int] = []  # tombstoned lanes, reused LIFO
+        self.compact_threshold = compact_threshold
+        self.version = 0
+
+    @property
+    def n_lanes(self) -> int:
+        """Allocated lanes, including tombstones (the padded-shape driver)."""
+        return len(self._rows)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._rows) - len(self._free)
+
+    @property
+    def n_words(self) -> int:
+        return max(1, -(-len(self._rows) // 32))
+
+    @property
+    def n_lanes_padded(self) -> int:
+        """Power-of-two (>= 32) lane count of :meth:`patterns_padded`."""
+        return next_pow2(max(32, len(self._rows)))
+
+    def add_plan(self, plan: CompiledInterest) -> Tuple[int, ...]:
+        """Register one plan's patterns; returns its (stable) lane map."""
+        local: List[int] = []
+        for j in range(plan.n_total):
+            key = (
+                int(plan.patterns[j, 0]),
+                int(plan.patterns[j, 1]),
+                int(plan.patterns[j, 2]),
+            )
+            lane = self._table.get(key)
+            if lane is None:
+                if self._free:
+                    lane = self._free.pop()
+                    self._rows[lane] = key
+                    self._refs[lane] = 0
+                else:
+                    lane = len(self._rows)
+                    self._rows.append(key)
+                    self._refs.append(0)
+                self._table[key] = lane
+                self.version += 1
+            self._refs[lane] += 1
+            local.append(lane)
+        return tuple(local)
+
+    def remove_plan(self, lanes: Sequence[int]) -> None:
+        """Release one plan's lanes (symmetric with :meth:`add_plan`)."""
+        for lane in lanes:
+            self._refs[lane] -= 1
+            if self._refs[lane] == 0:
+                del self._table[self._rows[lane]]
+                self._rows[lane] = None
+                self._free.append(lane)
+                self.version += 1
+            elif self._refs[lane] < 0:
+                raise ValueError(f"lane {lane} released more than acquired")
+
+    def maybe_compact(self, force: bool = False) -> Optional[Dict[int, int]]:
+        """Renumber away tombstones when they dominate the bank.
+
+        Returns the ``{old lane: new lane}`` remap (the caller must rewrite
+        every live plan's lane map), or None when no compaction happened.
+        """
+        n = len(self._rows)
+        if not self._free or (
+            not force and len(self._free) / n <= self.compact_threshold
+        ):
+            return None
+        remap: Dict[int, int] = {}
+        rows: List[Optional[Tuple[int, int, int]]] = []
+        refs: List[int] = []
+        for lane, row in enumerate(self._rows):
+            if row is None:
+                continue
+            remap[lane] = len(rows)
+            rows.append(row)
+            refs.append(self._refs[lane])
+        self._rows, self._refs, self._free = rows, refs, []
+        self._table = {row: lane for lane, row in enumerate(rows)}
+        self.version += 1
+        return remap
+
+    def patterns_padded(self) -> np.ndarray:
+        """int32[n_lanes_padded, 3] bank; tombstones/padding never match."""
+        out = np.full((self.n_lanes_padded, 3), np.int32(_DEAD_ROW[0]), np.int32)
+        for lane, row in enumerate(self._rows):
+            if row is not None:
+                out[lane] = row
+        return out
+
+
 class InterestCompileError(ValueError):
     pass
 

@@ -27,8 +27,21 @@ import numpy as np
 
 from .dictionary import Dictionary
 from .evaluation import SideResult, TripleIndex, build_index, make_side_evaluator
-from .interest import CompiledInterest, InterestExpr, compile_interest
-from .triples import PAD, TripleStore, difference, empty, from_array, union
+from .interest import (
+    CompiledInterest,
+    InterestExpr,
+    compile_interest,
+    next_pow2,
+)
+from .triples import (
+    PAD,
+    TripleStore,
+    difference,
+    empty,
+    from_array,
+    to_numpy,
+    union,
+)
 
 
 @partial(
@@ -120,6 +133,108 @@ def combine_side_results(
         r=r, r_i=r_i, r_prime=r_prime, a=a, a_i=a_i, overflow=overflow
     )
     return tau1, rho1, out
+
+
+def compose_changesets(
+    d1: TripleStore,
+    a1: TripleStore,
+    d2: TripleStore,
+    a2: TripleStore,
+    capacity: int,
+) -> Tuple[TripleStore, TripleStore, jax.Array]:
+    """Sequential composition of two changesets under Definition 6.
+
+    Applying ``<D1, A1>`` then ``<D2, A2>`` to any store equals applying the
+    single composed changeset ``<D1 ∪ D2, (A1 \\ D2) ∪ A2>`` (delete-first
+    ordering makes late adds win over early deletes and late deletes cancel
+    early adds). The broker's push scheduler uses this to accumulate pending
+    deltas host-side for slow-cadence subscribers, so a policy firing after k
+    changesets routes **one** batched evaluation through the fused pass.
+
+    Returns ``(d, a, overflowed)`` at the given output capacity.
+    """
+    d, ovf_d = union(d1, d2, capacity)
+    a, ovf_a = union(difference(a1, d2), a2, capacity)
+    return d, a, ovf_d | ovf_a
+
+
+@dataclasses.dataclass
+class ChangesetBatch:
+    """Host-managed accumulator of composed, not-yet-delivered changesets
+    (the composition itself runs through the device triple-set algebra).
+
+    One batch exists per distinct consumption frontier (`first_id`): every
+    subscriber whose push policy has deferred the same suffix of the stream
+    shares one batch, so accumulation cost scales with the number of distinct
+    cadences, not subscribers. Capacities double transparently on overflow.
+    """
+
+    removed: TripleStore | None  # composed D (device); None while n == 1
+    added: TripleStore | None  # composed A (device); None while n == 1
+    removed_np: np.ndarray  # raw first changeset (fast path for n == 1)
+    added_np: np.ndarray
+    n_changesets: int
+    first_id: int
+    last_id: int
+    capacity: int
+
+    @staticmethod
+    def fresh(
+        removed: np.ndarray, added: np.ndarray, changeset_id: int
+    ) -> "ChangesetBatch":
+        cap = max(64, int(removed.shape[0]), int(added.shape[0]))
+        return ChangesetBatch(
+            removed=None,
+            added=None,
+            # copy: the batch may outlive the caller's (reusable) buffers
+            removed_np=np.array(removed, np.int32, copy=True),
+            added_np=np.array(added, np.int32, copy=True),
+            n_changesets=1,
+            first_id=changeset_id,
+            last_id=changeset_id,
+            capacity=next_pow2(cap),
+        )
+
+    def _materialize(self) -> None:
+        while True:
+            d, ovf_d = from_array(
+                jnp.asarray(self.removed_np, jnp.int32), self.capacity
+            )
+            a, ovf_a = from_array(
+                jnp.asarray(self.added_np, jnp.int32), self.capacity
+            )
+            if not bool(ovf_d | ovf_a):
+                self.removed, self.added = d, a
+                return
+            self.capacity *= 2
+
+    def extend(
+        self, removed: np.ndarray, added: np.ndarray, changeset_id: int
+    ) -> None:
+        """Fold one more raw changeset into the composed batch."""
+        if self.removed is None:
+            self._materialize()
+        need = max(int(removed.shape[0]), int(added.shape[0]))
+        while self.capacity < need:
+            self.capacity *= 2
+        d2, _ = from_array(jnp.asarray(removed, jnp.int32), self.capacity)
+        a2, _ = from_array(jnp.asarray(added, jnp.int32), self.capacity)
+        while True:
+            d, a, overflow = compose_changesets(
+                self.removed, self.added, d2, a2, self.capacity
+            )
+            if not bool(overflow):
+                break
+            self.capacity *= 2
+        self.removed, self.added = d, a
+        self.n_changesets += 1
+        self.last_id = changeset_id
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The composed batch as dense host arrays (D, A)."""
+        if self.removed is None:
+            return self.removed_np, self.added_np
+        return to_numpy(self.removed), to_numpy(self.added)
 
 
 def make_interest_step(

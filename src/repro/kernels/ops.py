@@ -99,7 +99,11 @@ def lane_bits(words: jax.Array, lanes) -> jax.Array:
     return acc
 
 
-def lane_bits_batched(words: jax.Array, lanes_arr: jax.Array) -> jax.Array:
+def lane_bits_batched(
+    words: jax.Array,
+    lanes_arr: jax.Array,
+    active: jax.Array | None = None,
+) -> jax.Array:
     """Batched lane routing for a subscriber cohort.
 
     ``words``: uint32[N, R, W] bank bitset words (per cohort member, per
@@ -107,6 +111,11 @@ def lane_bits_batched(words: jax.Array, lanes_arr: jax.Array) -> jax.Array:
     ``j`` reads bank lane ``lanes_arr[k, j]``. Returns uint32[N, R] local
     bitsets: the vectorized equivalent of calling :func:`lane_bits` once per
     member, used by the broker's vmapped cohort evaluation.
+
+    ``active`` (optional): bool[N] member mask. The broker pads cohorts to
+    power-of-two sizes so membership churn reuses cached executables; the
+    padding lanes are dummy members whose bits are forced to zero here, so
+    downstream evaluation sees no candidates and produces empty outputs.
     """
     n, r, _ = words.shape
     nt = lanes_arr.shape[1]
@@ -117,7 +126,10 @@ def lane_bits_batched(words: jax.Array, lanes_arr: jax.Array) -> jax.Array:
         nt, dtype=jnp.uint32
     )[None, None, :]
     # lanes occupy disjoint local bit positions, so sum == bitwise OR
-    return jnp.sum(bits, axis=2, dtype=jnp.uint32)
+    out = jnp.sum(bits, axis=2, dtype=jnp.uint32)
+    if active is not None:
+        out = jnp.where(active[:, None], out, jnp.uint32(0))
+    return out
 
 
 def merge_probe(

@@ -1,0 +1,281 @@
+"""Subscription-lifecycle tests for the cohort-cached broker.
+
+Golden churn: subscribe -> process -> unsubscribe -> process stays
+bit-identical to fresh per-interest engine runs over each subscriber's
+active window; membership changes recompile at most the touched cohort
+(asserted via the per-cohort compile counters); the incremental pattern
+bank keeps lane numbering stable under churn; an empty broker and 0-row
+changeset sides are well-defined.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    IncrementalPatternBank,
+    InterestExpr,
+    IrapEngine,
+    StepCapacities,
+    compile_interest,
+    to_set,
+)
+
+A = "rdf:type"
+CAPS = StepCapacities(n_removed=16, n_added=16, tau=64, rho=64, pulls=32)
+
+
+def star2(target: str, cls: str, pred: str) -> InterestExpr:
+    return InterestExpr.parse(
+        "g", target, bgp=[("?a", A, cls), ("?a", pred, "?v")]
+    )
+
+
+def star2_ogp(target: str, cls: str, pred: str) -> InterestExpr:
+    """Different static shape than :func:`star2` (carries an OGP pattern)."""
+    return InterestExpr.parse(
+        "g",
+        target,
+        bgp=[("?a", A, cls), ("?a", pred, "?v")],
+        ogp=[("?a", "p:page", "?w")],
+    )
+
+
+@pytest.fixture()
+def universe():
+    d = Dictionary()
+    tau0 = d.encode_triples(
+        [
+            ("e:1", A, "c:Athlete"),
+            ("e:2", A, "c:Athlete"),
+            ("e:2", "p:goals", "96"),
+            ("e:3", A, "c:Team"),
+        ]
+    )
+    changesets = [
+        (
+            d.encode_triples([("e:2", "p:goals", "96")]),
+            d.encode_triples([("e:2", "p:goals", "216"), ("e:4", A, "c:Athlete")]),
+        ),
+        (
+            np.zeros((0, 3), np.int32),
+            d.encode_triples([("e:4", "p:goals", "3"), ("e:3", "p:rank", "1")]),
+        ),
+        (
+            d.encode_triples([("e:4", "p:goals", "3")]),
+            d.encode_triples([("e:1", "p:goals", "7")]),
+        ),
+    ]
+    return d, tau0, changesets
+
+
+def assert_state_matches(sub, ref, label):
+    assert to_set(sub.tau) == to_set(ref.tau), label
+    assert to_set(sub.rho) == to_set(ref.rho), label
+
+
+def assert_outputs_identical(got, want, label):
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        got_f, want_f = getattr(got, field), getattr(want, field)
+        assert np.array_equal(
+            np.asarray(got_f.spo), np.asarray(want_f.spo)
+        ), (label, field)
+        assert int(got_f.n) == int(want_f.n), (label, field)
+
+
+def test_golden_churn_parity(universe):
+    """subscribe -> process -> unsubscribe -> process == fresh per-interest
+    runs over each subscriber's active window."""
+    d, tau0, changesets = universe
+    ath = star2("t:a", "c:Athlete", "p:goals")
+    team = star2("t:b", "c:Team", "p:rank")
+    late = star2("t:c", "c:Athlete", "p:goals")
+
+    broker = Broker(d)
+    sub_ath = broker.subscribe(ath, CAPS, initial_target=tau0)
+    sub_team = broker.subscribe(team, CAPS, initial_target=tau0)
+    outs1 = broker.process_changeset(*changesets[0])
+    broker.unsubscribe(sub_ath)
+    outs2 = broker.process_changeset(*changesets[1])
+    sub_late = broker.subscribe(late, CAPS, initial_target=tau0)
+    outs3 = broker.process_changeset(*changesets[2])
+
+    engine = IrapEngine(d)
+    ref_ath = engine.register_interest(ath, CAPS, initial_target=tau0)
+    ref_team = engine.register_interest(team, CAPS, initial_target=tau0)
+    ref_late = engine.register_interest(late, CAPS, initial_target=tau0)
+
+    want_ath = ref_ath.apply(*changesets[0])  # active: cs1 only
+    want_team = [ref_team.apply(*cs) for cs in changesets]  # cs1..cs3
+    want_late = ref_late.apply(*changesets[2])  # active: cs3 only
+
+    assert_outputs_identical(outs1[0], want_ath, "athlete cs1")
+    assert_outputs_identical(outs1[1], want_team[0], "team cs1")
+    assert_outputs_identical(outs2[0], want_team[1], "team cs2")
+    assert_outputs_identical(outs3[0], want_team[2], "team cs3")
+    assert_outputs_identical(outs3[1], want_late, "late cs3")
+    assert_state_matches(sub_team, ref_team, "team state")
+    assert_state_matches(sub_late, ref_late, "late state")
+    # the unsubscribed subscriber's state froze at its last evaluation
+    assert_state_matches(sub_ath, ref_ath, "athlete frozen state")
+
+
+def test_membership_change_recompiles_at_most_own_cohort(universe):
+    """Each subscribe/unsubscribe triggers <= 1 cohort compile on the next
+    pass; same-shape re-subscription reuses cached executables outright."""
+    d, tau0, changesets = universe
+    # pre-encode every interest constant so the id space (and with it the
+    # cohort keys) stays fixed across the whole churn sequence
+    for t in ("c:Athlete", "c:Team", "p:goals", "p:rank", "p:other", "p:page"):
+        d.encode_term(t)
+    broker = Broker(d)
+    a0 = broker.subscribe(star2("t:0", "c:Athlete", "p:goals"), CAPS,
+                          initial_target=tau0)
+    broker.subscribe(star2_ogp("t:1", "c:Team", "p:rank"), CAPS,
+                     initial_target=tau0)
+    broker.process_changeset(*changesets[0])
+    base = sum(broker.cohort_compiles.values())
+    assert base == 2  # one executable per shape cohort
+
+    # same-shape subscribe: cohort grows 1 -> 2 (padded 2) -> one compile;
+    # the OGP cohort must reuse its cached executable
+    broker.subscribe(star2("t:2", "c:Athlete", "p:other"), CAPS)
+    broker.process_changeset(*changesets[1])
+    delta1 = sum(broker.cohort_compiles.values()) - base
+    assert delta1 == 1
+
+    # unsubscribe back to the already-cached padded size: zero compiles
+    broker.unsubscribe(a0)
+    broker.process_changeset(*changesets[2])
+    delta2 = sum(broker.cohort_compiles.values()) - base - delta1
+    assert delta2 == 0
+
+    # re-subscribe the same shape again: padded size seen before -> zero
+    broker.subscribe(star2("t:3", "c:Athlete", "p:goals"), CAPS)
+    broker.process_changeset(*changesets[0])
+    delta3 = sum(broker.cohort_compiles.values()) - base - delta1 - delta2
+    assert delta3 == 0
+    # and rejit time was accounted separately from evaluation time
+    assert all(st.rejit_s <= st.elapsed_s for st in broker.stats)
+
+
+def test_empty_broker_and_empty_changesets(universe):
+    """Unsubscribing the last subscriber clears the bank; processing an
+    empty broker and 0-row changeset sides is well-defined."""
+    d, tau0, changesets = universe
+    broker = Broker(d)
+    empty_cs = (np.zeros((0, 3), np.int32), np.zeros((0, 3), np.int32))
+    assert broker.process_changeset(*empty_cs) == []
+
+    sub = broker.subscribe(star2("t:0", "c:Athlete", "p:goals"), CAPS,
+                           initial_target=tau0)
+    assert broker.bank.n_lanes == 2
+    broker.unsubscribe(sub)
+    assert broker.bank.n_lanes == 0 and broker.bank.n_live == 0
+    assert broker.process_changeset(*changesets[0]) == []
+
+    # re-subscribing after a full drain starts from a fresh bank
+    sub2 = broker.subscribe(star2("t:1", "c:Team", "p:rank"), CAPS,
+                            initial_target=tau0)
+    outs = broker.process_changeset(*changesets[1])
+    engine = IrapEngine(d)
+    ref = engine.register_interest(sub2.expr, CAPS, initial_target=tau0)
+    want = ref.apply(*changesets[1])
+    assert_outputs_identical(outs[0], want, "post-drain subscriber")
+    # 0-row sides with live subscribers produce empty outputs
+    outs = broker.process_changeset(*empty_cs)
+    assert int(outs[0].r.n) == 0 and int(outs[0].a.n) == 0
+
+
+def test_shared_target_single_index_build(universe):
+    """share_target=True subscribers share one replica (and one
+    build_index inside the cohort step) and stay bit-identical to an
+    independent engine run."""
+    d, tau0, changesets = universe
+    expr = star2("t:shared", "c:Athlete", "p:goals")
+    broker = Broker(d)
+    s1 = broker.subscribe(expr, CAPS, initial_target=tau0)
+    s2 = broker.subscribe(expr, CAPS, share_target=True)
+    assert s2.tau is s1.tau and s2.share_tag is s1
+
+    engine = IrapEngine(d)
+    ref = engine.register_interest(expr, CAPS, initial_target=tau0)
+    for cs in changesets:
+        outs = broker.process_changeset(*cs)
+        want = ref.apply(*cs)
+        assert outs[0] is outs[1]  # one evaluation fanned out
+        assert_outputs_identical(outs[0], want, "shared twin")
+    assert broker.subs[0].tau is broker.subs[1].tau
+    assert_state_matches(s2, ref, "shared twin state")
+    # the cohort executable was specialized to fewer unique targets than
+    # members: (ncp, nup) == (2, 1)
+    assert any(
+        k[4] == 2 and k[5] == 1
+        for k in broker.cohort_compiles
+        if k[0] == "cohort"
+    )
+
+
+# ---------------------------------------------------------------------------
+# incremental pattern bank (layer 2) unit tests
+# ---------------------------------------------------------------------------
+
+def _plan(d, cls, pred):
+    return compile_interest(star2("t", cls, pred), d)
+
+
+def test_incremental_bank_stable_lanes_and_tombstones():
+    d = Dictionary()
+    bank = IncrementalPatternBank()
+    p1 = _plan(d, "c:A", "p:x")
+    p2 = _plan(d, "c:A", "p:y")  # shares the type pattern with p1
+    l1 = bank.add_plan(p1)
+    l2 = bank.add_plan(p2)
+    assert l1 == (0, 1) and l2 == (0, 2)  # dedup: shared type lane
+    assert bank.n_lanes == 3 and bank.n_live == 3
+
+    bank.remove_plan(l2)
+    # shared lane survives (refcounted), p2's own lane is tombstoned
+    assert bank.n_live == 2 and bank.n_lanes == 3
+    assert l1 == (0, 1)  # untouched
+    pad = bank.patterns_padded()
+    assert pad.shape == (32, 3)
+    assert np.array_equal(pad[list(l1)], p1.patterns)
+
+    # tombstoned lane is reused by the next registration: no growth
+    p3 = _plan(d, "c:A", "p:z")
+    l3 = bank.add_plan(p3)
+    assert set(l3) == {0, 2} and bank.n_lanes == 3
+
+
+def test_incremental_bank_compaction_remap():
+    d = Dictionary()
+    bank = IncrementalPatternBank()
+    plans = [_plan(d, f"c:{i}", f"p:{i}") for i in range(4)]
+    lanes = [bank.add_plan(p) for p in plans]
+    for ln in lanes[:3]:
+        bank.remove_plan(ln)
+    assert bank.n_live == 2  # survivor's two patterns
+    remap = bank.maybe_compact()
+    assert remap is not None
+    new_lanes = tuple(remap[l] for l in lanes[3])
+    assert set(new_lanes) == {0, 1}
+    assert np.array_equal(
+        bank.patterns_padded()[list(new_lanes)], plans[3].patterns
+    )
+    assert bank.maybe_compact() is None  # idempotent
+
+
+def test_incremental_bank_matches_batch_build():
+    """Pure-append incremental construction equals build_pattern_bank."""
+    from repro.core import build_pattern_bank
+
+    d = Dictionary()
+    plans = [_plan(d, f"c:{i % 2}", f"p:{i}") for i in range(5)]
+    bank = IncrementalPatternBank()
+    lanes = [bank.add_plan(p) for p in plans]
+    ref = build_pattern_bank(plans)
+    assert tuple(lanes) == ref.lanes
+    assert np.array_equal(
+        bank.patterns_padded()[: ref.n_lanes], ref.patterns
+    )

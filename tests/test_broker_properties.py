@@ -208,6 +208,96 @@ def test_lane_bits_random_banks(n_pat, n_lanes, seed):
     np.testing.assert_array_equal(np.asarray(local), np.asarray(want))
 
 
+# ---------------------------------------------------------------------------
+# subscription churn: membership changes recompile at most their own cohort
+# ---------------------------------------------------------------------------
+
+CHURN_DICT = Dictionary()
+for _t in (
+    ["type", "Athlete", "Team", "goals", "rank"]
+    + [f"e{i}" for i in range(8)]
+    + [f"o{i}" for i in range(4)]
+):
+    CHURN_DICT.encode_term(_t)
+CHURN_CAPS = StepCapacities(
+    n_removed=8, n_added=8, tau=256, rho=128, pulls=64, fanout=4
+)
+# executable cache shared across hypothesis examples (cohort keys are pure
+# shape keys, so cross-broker reuse is sound and keeps examples cheap); the
+# first cold example still exercises the compile-counting path for real.
+# Must match Broker's own LRU cache type (OrderedDict).
+from collections import OrderedDict
+
+CHURN_EXEC_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+
+_CHURN_EXPRS = [
+    InterestExpr.parse(
+        "g", "t0", bgp=[("?a", "type", "Athlete"), ("?a", "goals", "?v")]
+    ),
+    InterestExpr.parse(
+        "g", "t1", bgp=[("?a", "type", "Team"), ("?a", "rank", "?v")]
+    ),
+    InterestExpr.parse("g", "t2", bgp=[("?a", "goals", "?v")]),
+    InterestExpr.parse("g", "t3", bgp=[("?a", "rank", "?v")]),
+]
+
+_CHURN_SUBJ = [CHURN_DICT.lookup(f"e{i}") for i in range(8)]
+_CHURN_PRED = [CHURN_DICT.lookup(x) for x in ("type", "goals", "rank")]
+_CHURN_OBJ = [CHURN_DICT.lookup(x) for x in ("Athlete", "Team", "o0", "o1")]
+
+
+def _churn_rows(draw, max_size):
+    tris = draw(
+        st.sets(
+            st.tuples(
+                st.sampled_from(_CHURN_SUBJ),
+                st.sampled_from(_CHURN_PRED),
+                st.sampled_from(_CHURN_OBJ),
+            ),
+            max_size=max_size,
+        )
+    )
+    return np_rows(tris)
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_churn_recompile_bound(data):
+    """Random subscribe/unsubscribe/process sequences never exceed one
+    cohort recompile per membership change (and none without one)."""
+    from repro.core import Broker
+
+    broker = Broker(CHURN_DICT)
+    broker._exec_cache = CHURN_EXEC_CACHE
+    live = []
+    i_next = 0
+    ops = data.draw(
+        st.lists(st.sampled_from("SUC"), min_size=2, max_size=8)
+    )
+    for op in ops:
+        if op == "U" and live:
+            broker.unsubscribe(live.pop(data.draw(
+                st.integers(0, len(live) - 1))))
+            changed = 1
+        elif op == "C" and live:
+            changed = 0
+        else:  # subscribe (also the fallback when nothing is live)
+            live.append(
+                broker.subscribe(
+                    _CHURN_EXPRS[i_next % len(_CHURN_EXPRS)], CHURN_CAPS
+                )
+            )
+            i_next += 1
+            changed = 1
+        before = sum(broker.cohort_compiles.values())
+        broker.process_changeset(
+            _churn_rows(data.draw, 4), _churn_rows(data.draw, 4)
+        )
+        delta = sum(broker.cohort_compiles.values()) - before
+        assert delta <= changed, (op, delta)
+
+
 @given(combo=st.sampled_from(sorted(COMBOS)))
 @HSETTINGS
 def test_bank_lane_maps_recover_plan_patterns(combo):

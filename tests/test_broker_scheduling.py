@@ -1,0 +1,204 @@
+"""Push-scheduler tests: per-subscriber cadences over the fused pass.
+
+Scheduled (every-k / priority / max-staleness) outputs must stay
+bit-identical to eagerly evaluating the same composed changesets per
+subscriber, deferral must not touch a subscriber's τ/ρ, and flush()
+drains pending batches. Also covers the Definition-6 changeset
+composition algebra the scheduler batches with.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    IrapEngine,
+    PushPolicy,
+    StepCapacities,
+    apply_changeset,
+    compose_changesets,
+    from_numpy,
+    to_set,
+)
+from repro.core.propagation import ChangesetBatch
+
+A = "rdf:type"
+CAPS = StepCapacities(n_removed=16, n_added=16, tau=64, rho=64, pulls=32)
+
+
+@pytest.fixture()
+def setting():
+    d = Dictionary()
+    expr = InterestExpr.parse(
+        "g", "t", bgp=[("?a", A, "c:Athlete"), ("?a", "p:goals", "?v")]
+    )
+    tau0 = d.encode_triples(
+        [("e:1", A, "c:Athlete"), ("e:1", "p:goals", "10")]
+    )
+    changesets = [
+        (
+            d.encode_triples([("e:1", "p:goals", "10")]),
+            d.encode_triples([("e:1", "p:goals", "11"), ("e:2", A, "c:Athlete")]),
+        ),
+        (
+            np.zeros((0, 3), np.int32),
+            d.encode_triples([("e:2", "p:goals", "4"), ("e:3", "p:x", "y")]),
+        ),
+        (
+            d.encode_triples([("e:2", "p:goals", "4"), ("e:1", "p:goals", "11")]),
+            d.encode_triples([("e:1", "p:goals", "12")]),
+        ),
+        (
+            d.encode_triples([("e:2", A, "c:Athlete")]),
+            d.encode_triples([("e:4", A, "c:Athlete"), ("e:4", "p:goals", "0")]),
+        ),
+    ]
+    return d, expr, tau0, changesets
+
+
+def composed(changesets, cap=256):
+    """Fold raw changesets into one batch via the Definition-6 algebra."""
+    batch = ChangesetBatch.fresh(*changesets[0], 1)
+    for i, cs in enumerate(changesets[1:], start=2):
+        batch.extend(*cs, i)
+    return batch.arrays()
+
+
+def assert_outputs_identical(got, want, label):
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        got_f, want_f = getattr(got, field), getattr(want, field)
+        assert np.array_equal(
+            np.asarray(got_f.spo), np.asarray(want_f.spo)
+        ), (label, field)
+
+
+def test_compose_changesets_matches_sequential_apply():
+    """<D1∪D2, (A1\\D2)∪A2> applied once == the two changesets in order."""
+    rng = np.random.default_rng(3)
+    for trial in range(8):
+        def rows(n):
+            return np.unique(
+                rng.integers(0, 5, size=(n, 3)).astype(np.int32), axis=0
+            )
+
+        base = from_numpy(rows(10), 64)
+        d1, a1 = from_numpy(rows(4), 16), from_numpy(rows(4), 16)
+        d2, a2 = from_numpy(rows(4), 16), from_numpy(rows(4), 16)
+        seq, _ = apply_changeset(base, d1, a1)
+        seq, _ = apply_changeset(seq, d2, a2)
+        d12, a12, ovf = compose_changesets(d1, a1, d2, a2, 64)
+        assert not bool(ovf)
+        once, _ = apply_changeset(base, d12, a12)
+        assert to_set(once) == to_set(seq), trial
+
+
+def test_every_k_matches_eager_composed_batches(setting):
+    """An every-2 subscriber fires on cs2/cs4 with the composed batches and
+    matches an engine fed exactly those batches; the eager subscriber keeps
+    per-changeset parity throughout."""
+    d, expr, tau0, changesets = setting
+    broker = Broker(d)
+    eager = broker.subscribe(expr, CAPS, initial_target=tau0)
+    slow = broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.every(2)
+    )
+
+    engine = IrapEngine(d)
+    ref_eager = engine.register_interest(expr, CAPS, initial_target=tau0)
+    ref_slow = engine.register_interest(expr, CAPS, initial_target=tau0)
+
+    for i, cs in enumerate(changesets):
+        outs = broker.process_changeset(*cs)
+        want = ref_eager.apply(*cs)
+        assert_outputs_identical(outs[0], want, ("eager", i))
+        if i % 2 == 0:  # cs1 / cs3: deferred — no evaluation, no state change
+            assert outs[1] is None
+            assert broker.stats[-1].n_deferred == 1
+        else:  # cs2 / cs4: fires with the composed pending batch
+            want_slow = ref_slow.apply(*composed(changesets[i - 1 : i + 1]))
+            assert_outputs_identical(outs[1], want_slow, ("slow", i))
+    assert to_set(slow.tau) == to_set(ref_slow.tau)
+    assert to_set(slow.rho) == to_set(ref_slow.rho)
+    assert to_set(eager.tau) == to_set(ref_eager.tau)
+
+
+def test_priority_lane_is_eager_and_first(setting):
+    d, expr, tau0, changesets = setting
+    broker = Broker(d)
+    broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.priority_lane()
+    )
+    engine = IrapEngine(d)
+    ref = engine.register_interest(expr, CAPS, initial_target=tau0)
+    for i, cs in enumerate(changesets):
+        outs = broker.process_changeset(*cs)
+        assert outs[0] is not None
+        assert_outputs_identical(outs[0], ref.apply(*cs), ("priority", i))
+        assert broker.stats[-1].n_evaluated == 1
+
+
+def test_max_staleness_defers_until_flush(setting):
+    """A pure staleness policy with a huge bound never fires on its own;
+    flush() drains the whole pending batch in one evaluation."""
+    d, expr, tau0, changesets = setting
+    broker = Broker(d)
+    lazy = broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.max_staleness(1e9)
+    )
+    for cs in changesets[:3]:
+        outs = broker.process_changeset(*cs)
+        assert outs[0] is None
+    assert int(lazy.tau.n) == 2  # untouched since init
+
+    flushed = broker.flush()
+    engine = IrapEngine(d)
+    ref = engine.register_interest(expr, CAPS, initial_target=tau0)
+    want = ref.apply(*composed(changesets[:3]))
+    assert_outputs_identical(flushed[0], want, "flush")
+    assert to_set(lazy.tau) == to_set(ref.tau)
+    assert to_set(lazy.rho) == to_set(ref.rho)
+    # nothing pending anymore: flush is a no-op
+    assert broker.flush() == [None]
+
+
+def test_max_staleness_zero_fires_every_changeset(setting):
+    d, expr, tau0, changesets = setting
+    broker = Broker(d)
+    broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.max_staleness(0.0)
+    )
+    engine = IrapEngine(d)
+    ref = engine.register_interest(expr, CAPS, initial_target=tau0)
+    for i, cs in enumerate(changesets[:2]):
+        outs = broker.process_changeset(*cs)
+        assert_outputs_identical(outs[0], ref.apply(*cs), ("stale0", i))
+
+
+def test_flush_single_subscriber(setting):
+    """flush(subs=[one]) drains only that subscriber's pending batch."""
+    d, expr, tau0, changesets = setting
+    broker = Broker(d)
+    s1 = broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.every(3)
+    )
+    s2 = broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.every(3)
+    )
+    broker.process_changeset(*changesets[0])
+    flushed = broker.flush(subs=[s1])
+    assert flushed[0] is not None and flushed[1] is None
+
+    engine = IrapEngine(d)
+    ref = engine.register_interest(expr, CAPS, initial_target=tau0)
+    want = ref.apply(*changesets[0])
+    assert_outputs_identical(flushed[0], want, "single flush")
+    assert to_set(s1.tau) == to_set(ref.tau)
+    assert int(s2.tau.n) == 2  # still pending
+    # s2 later drains the same (still retained) batch plus the next one
+    broker.process_changeset(*changesets[1])
+    out2 = broker.flush(subs=[s2])[1]
+    ref2 = IrapEngine(d).register_interest(expr, CAPS, initial_target=tau0)
+    want2 = ref2.apply(*composed(changesets[:2]))
+    assert_outputs_identical(out2, want2, "catch-up flush")
+    assert to_set(s2.tau) == to_set(ref2.tau)
