@@ -1,0 +1,215 @@
+"""Deferred-path throughput: device-resident + frontier-stacked flush vs
+the PR 2 host-round-trip baseline.
+
+The broker's scheduled path is where the paper's batching amortization
+lives (``PushPolicy`` — slow consumers absorb k changesets per push). PR 2
+paid a device→host→device round trip per fire and one sequential cohort
+pass per frontier; this benchmark drives identical deferred workloads —
+``n_subs`` subscribers over several shape cohorts, half flushed early so
+every full flush drains TWO distinct consumption frontiers — through
+
+  * device    — ``Broker(deferred_device_resident=True)`` (default): fires
+                consume the composed batches' sorted device stores
+                (``ChangesetBatch.device_stores`` + ``triples.rehome``) and
+                same-shape cohorts stack across frontiers into one
+                executable call,
+  * roundtrip — ``Broker(deferred_device_resident=False)``: the PR 2
+                behavior (``ChangesetBatch.arrays()`` + ``from_array``
+                re-upload per fire, sequential per-frontier passes).
+
+Before timing, one warm round asserts the two paths' flush outputs
+bit-identical to each other AND to eager evaluation of the same composed
+batches by the seed per-interest engine. Reported: flush seconds per round
+(compile time excluded via ``BrokerStats.rejit_s``), cohort passes per
+flush, and the speedup ratio. Emits ``experiments/bench/BENCH_flush.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only flush
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    IrapEngine,
+    PushPolicy,
+    StepCapacities,
+)
+from repro.core.propagation import ChangesetBatch
+
+from .common import csv_row, save_json
+
+N_SHAPES = 3
+
+
+def _interest(i: int) -> InterestExpr:
+    cls = f"cls{i % 6}"
+    p = f"p{i % 6}"
+    shape = i % N_SHAPES
+    if shape == 0:
+        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
+        ogp = []
+    elif shape == 1:
+        bgp = [("?a", "rdf:type", cls)]
+        ogp = []
+    else:
+        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
+        ogp = [("?a", "foaf:page", "?w")]
+    return InterestExpr.parse(
+        source="synthetic://flush", target=f"local://sub{i}", bgp=bgp, ogp=ogp
+    )
+
+
+def _caps() -> StepCapacities:
+    return StepCapacities(
+        n_removed=256, n_added=256, tau=1024, rho=512, pulls=256, fanout=4
+    )
+
+
+def _stream(
+    d: Dictionary, n: int, rows_per_side: int = 48, seed: int = 0
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+
+    def rows(k):
+        out = []
+        for _ in range(k):
+            e = f"e{rng.integers(0, 400)}"
+            kind = rng.integers(0, 4)
+            if kind == 0:
+                out.append((e, "rdf:type", f"cls{rng.integers(0, 6)}"))
+            elif kind == 1:
+                out.append((e, f"p{rng.integers(0, 6)}", f"o{rng.integers(0, 40)}"))
+            else:
+                out.append((e, f"noise{rng.integers(0, 6)}", f"o{rng.integers(0, 40)}"))
+        return d.encode_triples(out)
+
+    return [
+        (rows(rows_per_side // 2), rows(rows_per_side)) for _ in range(n)
+    ]
+
+
+def _composed(changesets, start_id=1):
+    batch = ChangesetBatch.fresh(*changesets[0], start_id)
+    for i, cs in enumerate(changesets[1:], start=start_id + 1):
+        batch.extend(*cs, i)
+    return batch.arrays()
+
+
+def _assert_outputs_equal(got, want, label):
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        gf, wf = getattr(got, field), getattr(want, field)
+        if not np.array_equal(np.asarray(gf.spo), np.asarray(wf.spo)):
+            raise AssertionError(f"deferred outputs diverge: {label}/{field}")
+
+
+def _build(d: Dictionary, n_subs: int, device: bool) -> Tuple[Broker, list]:
+    broker = Broker(d, deferred_device_resident=device)
+    policy = PushPolicy.max_staleness(1e9)  # only explicit flush fires
+    subs = [
+        broker.subscribe(_interest(i), _caps(), policy=policy)
+        for i in range(n_subs)
+    ]
+    return broker, subs
+
+
+def _run_rounds(
+    broker: Broker, subs: list, stream, n_rounds: int, per_round: int
+) -> dict:
+    """Each round: feed, flush half (frontier split), feed, flush all —
+    so every full flush drains two distinct frontiers."""
+    half = subs[: len(subs) // 2]
+    it = iter(stream)
+    warm_stats = len(broker.stats)
+    for _ in range(n_rounds):
+        for _ in range(per_round):
+            broker.process_changeset(*next(it))
+        broker.flush(subs=half)
+        for _ in range(per_round):
+            broker.process_changeset(*next(it))
+        broker.flush()
+    flush_stats = [
+        st for st in broker.stats[warm_stats:] if st.total_added == 0
+    ]
+    eval_s = sum(st.elapsed_s - st.rejit_s for st in flush_stats)
+    return {
+        "n_flushes": len(flush_stats),
+        "flush_eval_s": eval_s,
+        "flush_eval_s_per_round": eval_s / max(1, n_rounds),
+        "cohort_passes": sum(st.n_cohort_passes for st in flush_stats),
+        "rejit_s": sum(st.rejit_s for st in broker.stats[warm_stats:]),
+    }
+
+
+def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 6,
+        per_round: int = 4) -> str:
+    need = 2 * per_round * (n_rounds + 1)
+    streams = {}
+    brokers = {}
+    for name, device in (("device", True), ("roundtrip", False)):
+        d = Dictionary()
+        stream = _stream(d, need, seed=0)
+        brokers[name] = _build(d, n_subs, device)
+        streams[name] = stream
+
+    # -- warm + parity round: both paths vs eager composed-batch evaluation
+    warm = {name: streams[name][: 2 * per_round] for name in brokers}
+    flushed = {}
+    for name, (broker, subs) in brokers.items():
+        for cs in warm[name]:
+            broker.process_changeset(*cs)
+        flushed[name] = broker.flush()
+    d_ref = Dictionary()
+    ref_stream = _stream(d_ref, need, seed=0)
+    engine = IrapEngine(d_ref)
+    refs = [
+        engine.register_interest(_interest(i), _caps())
+        for i in range(n_subs)
+    ]
+    d_np, a_np = _composed(ref_stream[: 2 * per_round])
+    for k, ref in enumerate(refs):
+        want = ref.apply(d_np, a_np)
+        _assert_outputs_equal(flushed["device"][k], want, f"device/{k}")
+        _assert_outputs_equal(flushed["roundtrip"][k], want, f"roundtrip/{k}")
+
+    # -- timed rounds (steady state: executables + statics cached)
+    results = {}
+    for name, (broker, subs) in brokers.items():
+        results[name] = _run_rounds(
+            broker, subs, streams[name][2 * per_round :], n_rounds, per_round
+        )
+        results[name]["n_subscribers"] = n_subs
+        results[name]["changesets_per_round"] = 2 * per_round
+
+    speedup = results["roundtrip"]["flush_eval_s"] / max(
+        1e-9, results["device"]["flush_eval_s"]
+    )
+    pass_ratio = results["roundtrip"]["cohort_passes"] / max(
+        1, results["device"]["cohort_passes"]
+    )
+    save_json(
+        "BENCH_flush",
+        {
+            "device_resident": results["device"],
+            "round_trip_baseline": results["roundtrip"],
+            "flush_speedup": speedup,
+            "cohort_pass_ratio": pass_ratio,
+            "parity": {
+                "checked_against_eager_composed_batches": True,
+                "subscribers_checked": n_subs,
+            },
+            "scale": scale,
+        },
+    )
+    us = results["device"]["flush_eval_s_per_round"] * 1e6
+    return csv_row(
+        "broker_flush",
+        us,
+        f"speedup_x={speedup:.2f};passes "
+        f"{results['device']['cohort_passes']}"
+        f"vs{results['roundtrip']['cohort_passes']};subs={n_subs}",
+    )

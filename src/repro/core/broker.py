@@ -34,15 +34,23 @@ The broker is three layers:
    stacked ``I_k = A ∪ ρ_k`` sets (Definition 14); bitset-lane routing hands
    each subscriber its local pattern bits.
 
-3. **Push scheduler.** Each subscription carries a :class:`PushPolicy`
-   (every-k-changesets, priority lane, or max-staleness, cf. the SPARQL
-   refresh-scheduling literature). The host orchestrator accumulates
-   pending changesets as composed batches (:func:`repro.core.propagation
-   .compose_changesets` — Definition 6 algebra over the device triple-set
-   ops — one batch per consumption
-   frontier), and a subscriber's cohort is routed through the fused pass only
-   when its policy fires; :meth:`Broker.flush` drains the rest. Subscribers
-   attached to one target dataset replica (``subscribe(...,
+3. **Push scheduler — device-resident, frontier-stacked.** Each
+   subscription carries a :class:`PushPolicy` (every-k-changesets, priority
+   lane, or max-staleness, cf. the SPARQL refresh-scheduling literature).
+   The host orchestrator accumulates pending changesets as composed batches
+   (:func:`repro.core.propagation.compose_changesets` — Definition 6
+   algebra over the device triple-set ops — one batch per consumption
+   frontier), and a subscriber's cohort is routed through the fused pass
+   only when its policy fires; :meth:`Broker.flush` drains the rest. The
+   deferred path stays on device end-to-end: a fire consumes the batch's
+   already-lex-sorted device stores (:meth:`~repro.core.propagation
+   .ChangesetBatch.device_stores`), re-homing via
+   :func:`repro.core.triples.rehome` (pad/slice, never re-sort or
+   transfer) when padding shapes change, and when several frontiers fire in
+   one call their same-shape cohort invocations stack into ONE batched
+   executable call (the frontier is one more padded, masked axis folded
+   into the cohort's member dimension — see :func:`make_cohort_step`).
+   Subscribers attached to one target dataset replica (``subscribe(...,
    share_target=True)``) share a single ``build_index(τ)`` inside the
    cohort step.
 
@@ -105,7 +113,7 @@ from .propagation import (
     StepCapacities,
     combine_side_results,
 )
-from .triples import PAD, TripleStore, empty, from_array, union
+from .triples import PAD, TripleStore, empty, from_array, rehome, union
 
 
 def _plan_shape_key(plan: CompiledInterest):
@@ -194,21 +202,27 @@ def make_cohort_step(
     id_capacity: int,
     matcher: Optional[Callable] = None,
 ) -> Callable:
-    """Build the jitted fused step for ONE shape-homogeneous cohort.
+    """Build the jitted fused step for ONE shape-homogeneous cohort,
+    spanning every deferred frontier that fires in the same call.
 
     ``plan`` supplies only static structure (kinds, slots, const masks); the
-    pattern *values*, lane maps, bank array, target stores, and member mask
-    are traced inputs, so one compiled executable serves any cohort of this
-    shape — across subscription churn, bank growth, and re-subscription.
+    pattern *values*, lane maps, bank array, target stores, frontier
+    changesets, and member mask are traced inputs, so one compiled
+    executable serves any cohort of this shape — across subscription churn,
+    bank growth, re-subscription, and any assignment of members to
+    frontiers.
 
-    Signature (``Nc`` = padded cohort size, ``Nu`` = padded unique-target
-    count, ``W`` = padded bank words)::
+    Signature (``Nc`` = padded member count across all frontiers, ``Nu`` =
+    padded unique-target count, ``Fp`` = padded frontier count, ``W`` =
+    padded bank words)::
 
-        step(d_set,            # TripleStore, deleted side (shared)
-             d_words,          # uint32[|D|, W] bank bitset over d_set
-             a_set,            # TripleStore, added side (shared)
+        step(d_sets,           # Fp-tuple of TripleStore — deleted side per
+                               #   frontier (padding slots: empty stores)
+             d_words,          # Fp-tuple of uint32[|D|, W] bank bitsets
+             a_sets,           # Fp-tuple of TripleStore — added side
              bank_dev,         # int32[32 W, 3] padded pattern bank
              uniq_taus,        # Nu-tuple of TripleStore — unique replicas
+             f_map,            # int32[Nc] member -> frontier slot
              tgt_map,          # int32[Nc] member -> unique replica slot
              rhos,             # Nc-tuple of TripleStore
              pats,             # int32[Nc, nt, 3] pattern values per member
@@ -216,10 +230,20 @@ def make_cohort_step(
              active,           # bool[Nc] member mask (False = padding lane)
         ) -> (tau1s, rho1s, outs)   # Nc-tuples, per member
 
+    The frontier dimension is folded into the member axis rather than a
+    nested batch: every member gathers its own frontier's (D, A, D-words)
+    slice via ``f_map`` and the whole cohort — across however many deferred
+    frontiers fired together — runs as ONE vmapped executable call. A
+    single-frontier fire is simply ``Fp == 1`` with an all-zero ``f_map``,
+    so the eager path and the stacked flush path share executables of the
+    same shape family (cached separately per ``Fp``).
+
     Member stores go in and come out as *tuples*: stacking for the vmap and
     per-member unstacking happen inside the traced step, so the host pays
     one executable call per cohort instead of O(members) eager stack/slice
-    dispatches per changeset.
+    dispatches per changeset. The added side routes through the fused
+    match+route kernel (:func:`repro.kernels.ops.pattern_lane_bits_batched`)
+    — one pass over each member's ``I_k`` rows regardless of bank width.
 
     ``build_index(τ)`` runs once per *unique* target replica and is fanned
     out to members via ``tgt_map`` — subscribers attached to one target
@@ -239,11 +263,12 @@ def make_cohort_step(
 
     @jax.jit
     def step(
-        d_set: TripleStore,
-        d_words: jax.Array,
-        a_set: TripleStore,
+        d_sets: Tuple[TripleStore, ...],
+        d_words: Tuple[jax.Array, ...],
+        a_sets: Tuple[TripleStore, ...],
         bank_dev: jax.Array,
         uniq_taus: Tuple[TripleStore, ...],
+        f_map: jax.Array,
         tgt_map: jax.Array,
         rhos: Tuple[TripleStore, ...],
         pats: jax.Array,
@@ -253,21 +278,25 @@ def make_cohort_step(
         nc = lanes.shape[0]
         rhos_s = tree_stack(list(rhos))
         uniq_s = tree_stack(list(uniq_taus))
-        # I_k = A ∪ ρ_k (Def 14); fused bank pass over the stacked cohort
-        i_sets, ovf_i = jax.vmap(lambda r: union(a_set, r, caps.n_i))(rhos_s)
-        i_cap = i_sets.spo.shape[1]
-        i_words = kops.pattern_bitmask_words(
-            i_sets.spo.reshape(-1, 3), bank_dev, matcher=matcher
-        ).reshape(nc, i_cap, -1)
+        d_stack = tree_stack(list(d_sets))
+        a_stack = tree_stack(list(a_sets))
+        w_stack = jnp.stack(list(d_words))
 
-        # bitset-lane routing: bank words -> per-member local bits (padding
-        # members masked to zero so they see no candidates at all)
-        d_bits = kops.lane_bits_batched(
-            jnp.broadcast_to(d_words[None], (nc,) + d_words.shape),
-            lanes,
-            active=active,
+        # every member reads its own frontier's composed changeset
+        d_mem = tree_gather(d_stack, f_map)
+        a_mem = tree_gather(a_stack, f_map)
+        # I_k = A_f(k) ∪ ρ_k (Def 14)
+        i_sets, ovf_i = jax.vmap(lambda a, r: union(a, r, caps.n_i))(
+            a_mem, rhos_s
         )
-        a_bits = kops.lane_bits_batched(i_words, lanes, active=active)
+        # fused bank match + bitset-lane routing + member mask in one pass
+        # (padding members masked to zero so they see no candidates at all)
+        a_bits = kops.pattern_lane_bits_batched(
+            i_sets.spo, bank_dev, lanes, active, matcher=matcher
+        )
+        d_bits = kops.lane_bits_batched(
+            jnp.take(w_stack, f_map, axis=0), lanes, active=active
+        )
 
         # one build_index(τ) per unique target replica, gathered per member
         tgts_u = jax.vmap(build_index)(uniq_s)
@@ -275,8 +304,8 @@ def make_cohort_step(
         taus = tree_gather(uniq_s, tgt_map)
 
         d_res = jax.vmap(
-            lambda tgt, bits, p: eval_d(d_set, tgt, bits, p)
-        )(tgts, d_bits, pats)
+            lambda d_set, tgt, bits, p: eval_d(d_set, tgt, bits, p)
+        )(d_mem, tgts, d_bits, pats)
         a_res = jax.vmap(
             lambda i_set, tgt, bits, p: eval_a(i_set, tgt, bits, p)
         )(i_sets, tgts, a_bits, pats)
@@ -297,26 +326,31 @@ def _assemble_cohort_statics(
     pat_rows: Sequence[np.ndarray],
     lane_rows: Sequence[Sequence[int]],
     tgt: Sequence[int],
+    fmap: Sequence[int],
     ncp: int,
     nt: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """(tgt_map, pats, lanes, active) device inputs for one padded cohort.
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(f_map, tgt_map, pats, lanes, active) device inputs for one padded
+    cohort.
 
     Single definition of the dummy-lane encoding (zeros + active=False),
     shared by the Broker's cached path and the frozen make_broker_step
     wrapper so the two can never diverge.
     """
     nm = len(pat_rows)
+    f_map = np.zeros((ncp,), np.int32)
     tgt_map = np.zeros((ncp,), np.int32)
     pats = np.zeros((ncp, nt, 3), np.int32)
     lanes = np.zeros((ncp, nt), np.int32)
     active = np.zeros((ncp,), bool)
     for pos in range(nm):
+        f_map[pos] = fmap[pos]
         tgt_map[pos] = tgt[pos]
         pats[pos] = pat_rows[pos]
         lanes[pos] = np.asarray(lane_rows[pos], np.int32)
         active[pos] = True
     return (
+        jnp.asarray(f_map),
         jnp.asarray(tgt_map),
         jnp.asarray(pats),
         jnp.asarray(lanes),
@@ -379,12 +413,13 @@ def make_broker_step(
     ]
     # membership is frozen here, so the per-cohort static inputs (pattern
     # values, lane maps, member mask, identity tgt_map: no τ sharing in the
-    # one-shot wrapper) upload once
+    # one-shot wrapper, single-frontier f_map) upload once
     statics = [
         _assemble_cohort_statics(
             [plans[k].patterns for k in idxs],
             [bank.lanes[k] for k in idxs],
             list(range(len(idxs))),
+            [0] * len(idxs),
             next_pow2(len(idxs)),
             plan.n_total,
         )
@@ -404,9 +439,13 @@ def make_broker_step(
         tau1s = [None] * n_subs
         rho1s = [None] * n_subs
         outs = [None] * n_subs
-        for (idxs, plan, caps, _), fn, (tgt_map, pats, lanes, active) in zip(
-            cohorts, steps, statics
-        ):
+        for (idxs, plan, caps, _), fn, (
+            f_map,
+            tgt_map,
+            pats,
+            lanes,
+            active,
+        ) in zip(cohorts, steps, statics):
             nm = len(idxs)
             ncp = next_pow2(nm)
             taus_c = tuple(taus[k] for k in idxs) + (
@@ -416,11 +455,12 @@ def make_broker_step(
                 _empty_cached(caps.rho),
             ) * (ncp - nm)
             tau1_c, rho1_c, out_c = fn(
-                d_set,
-                d_words,
-                a_set,
+                (d_set,),
+                (d_words,),
+                (a_set,),
                 bank_dev,
                 taus_c,
+                f_map,
                 tgt_map,
                 rhos_c,
                 pats,
@@ -514,6 +554,23 @@ class BrokerStats:
     n_cohort_passes: int = 0  # cohort executables invoked
 
 
+@dataclasses.dataclass
+class _FrontierInput:
+    """One fired consumption frontier, abstracted over residency.
+
+    ``d_store`` / ``a_store`` produce the frontier's composed (D, A) at a
+    requested capacity; the device-resident path re-homes sorted device
+    stores (no transfer), the baseline path re-uploads host arrays.
+    ``d_rows`` / ``a_rows`` bound the valid rows for the capacity guards.
+    """
+
+    idxs: List[int]
+    d_rows: int
+    a_rows: int
+    d_store: Callable[[int], TripleStore]
+    a_store: Callable[[int], TripleStore]
+
+
 def _as_rows(arr) -> np.ndarray:
     """Normalize a changeset side to an int32 (N, 3) array; empty-friendly."""
     out = np.asarray(arr, dtype=np.int32)
@@ -535,6 +592,14 @@ class Broker:
     ``cache_executables=False`` reproduces the PR 1 lifecycle — every
     membership change discards all compiled steps — and exists as the
     baseline for ``benchmarks/broker_churn.py``.
+
+    ``deferred_device_resident=False`` reproduces the PR 2 deferred path —
+    every scheduled fire round-trips its composed batch device→host→device
+    and distinct frontiers run one sequential pass each — and exists as the
+    baseline for ``benchmarks/broker_flush.py``. The default keeps composed
+    batches on device end-to-end (:meth:`ChangesetBatch.device_stores` +
+    :func:`repro.core.triples.rehome`) and stacks same-shape cohorts fired
+    from different frontiers into one batched executable call.
     """
 
     def __init__(
@@ -542,6 +607,7 @@ class Broker:
         dictionary: Dictionary | None = None,
         matcher: Optional[Callable] = None,
         cache_executables: bool = True,
+        deferred_device_resident: bool = True,
     ):
         self.dictionary = dictionary if dictionary is not None else Dictionary()
         self.matcher = matcher
@@ -549,6 +615,7 @@ class Broker:
         self.stats: List[BrokerStats] = []
         self.bank = IncrementalPatternBank()
         self.cache_executables = cache_executables
+        self.deferred_device_resident = deferred_device_resident
         # LRU-bounded: superseded keys (outgrown caps, old padded sizes)
         # eventually fall out instead of holding XLA executables forever;
         # evicting a hot key only costs a recompile, never correctness
@@ -767,18 +834,31 @@ class Broker:
             )
             return (not has_priority, since)
 
-        n_passes = 0
+        ordered = sorted(groups, key=group_order)
+        fronts = [
+            self._frontier_input(groups[since], self._batches[since])
+            for since in ordered
+        ]
+        if self.deferred_device_resident:
+            # all fired frontiers in one evaluation: same-shape cohorts
+            # stack across frontiers into one batched executable call
+            outs, n_passes = self._evaluate_frontiers(fronts)
+        else:
+            # PR 2 baseline: one sequential pass per frontier
+            outs = {}
+            n_passes = 0
+            for fr in fronts:
+                o, passes = self._evaluate_frontiers([fr])
+                outs.update(o)
+                n_passes += passes
+
         now = time.perf_counter()
         tag_refs: Dict[int, int] = {}
         for s in self.subs:
             tag_refs[id(s.share_tag)] = tag_refs.get(id(s.share_tag), 0) + 1
-        for since in sorted(groups, key=group_order):
-            idxs = groups[since]
+        for since in ordered:
             batch = self._batches[since]
-            d_np, a_np = batch.arrays()
-            outs, passes = self._evaluate_group(idxs, d_np, a_np)
-            n_passes += passes
-            for k in idxs:
+            for k in groups[since]:
                 results[k] = outs[k]
                 s = self.subs[k]
                 s.since = batch.last_id + 1
@@ -801,6 +881,35 @@ class Broker:
             }
         return results, n_passes
 
+    def _frontier_input(
+        self, idxs: List[int], batch: ChangesetBatch
+    ) -> "_FrontierInput":
+        """One fired frontier as evaluator input.
+
+        Device-resident (default): the batch's already-lex-sorted composed
+        device stores re-home (pad/slice, never re-sort, never transfer) to
+        whatever capacity the evaluation needs. Round-trip baseline: the
+        composed batch is pulled to host and re-uploaded/re-sorted per fire
+        (the PR 2 behavior).
+        """
+        if self.deferred_device_resident:
+            d_rows, a_rows = batch.row_bounds()
+            return _FrontierInput(
+                idxs=idxs,
+                d_rows=d_rows,
+                a_rows=a_rows,
+                d_store=lambda cap: rehome(batch.device_stores()[0], cap),
+                a_store=lambda cap: rehome(batch.device_stores()[1], cap),
+            )
+        d_np, a_np = batch.arrays()
+        return _FrontierInput(
+            idxs=idxs,
+            d_rows=int(d_np.shape[0]),
+            a_rows=int(a_np.shape[0]),
+            d_store=lambda cap: from_array(jnp.asarray(d_np, jnp.int32), cap)[0],
+            a_store=lambda cap: from_array(jnp.asarray(a_np, jnp.int32), cap)[0],
+        )
+
     def _gc_batches(self) -> None:
         live = {s.since for s in self.subs}
         self._batches = {
@@ -812,28 +921,31 @@ class Broker:
     def _static_arrays(
         self,
         ckey: tuple,
-        members: List[int],
+        fk: List[Tuple[int, int]],
+        f_list: List[int],
         upos: Dict[int, int],
         ncp: int,
         nt: int,
     ):
         """Membership-static device inputs for one cohort invocation.
 
-        pats / lanes / tgt_map / active change only with membership, plan
-        recompiles, bank compaction, or shared-τ regrouping — all covered by
-        the cache key below — so the steady-state path skips the per-call
-        numpy rebuild and host-to-device transfers. Keyed by the full
-        membership signature (not just the cohort), so same-shape cohorts
-        fired from different frontiers (mixed cadences) each keep their own
-        entry instead of evicting one another; the LRU bound reclaims
-        superseded signatures.
+        f_map / pats / lanes / tgt_map / active change only with membership,
+        frontier grouping, plan recompiles, bank compaction, or shared-τ
+        regrouping — all covered by the cache key below — so the
+        steady-state path skips the per-call numpy rebuild and
+        host-to-device transfers. Keyed by the full membership signature
+        (not just the cohort), so same-shape cohorts fired from different
+        frontier combinations (mixed cadences) each keep their own entry
+        instead of evicting one another; the LRU bound reclaims superseded
+        signatures.
         """
         subs = self.subs
         key = (
             ckey,
-            tuple(subs[k].serial for k in members),
-            tuple(subs[k].plan_version for k in members),
-            tuple(upos[k] for k in members),
+            tuple(subs[k].serial for _, k in fk),
+            tuple(subs[k].plan_version for _, k in fk),
+            tuple(upos[k] for _, k in fk),
+            tuple(f_list),
             self.bank.version,
         )
         cached = self._static_arrays_cache.get(key)
@@ -841,9 +953,10 @@ class Broker:
             self._static_arrays_cache.move_to_end(key)
             return cached
         arrays = _assemble_cohort_statics(
-            [subs[k].plan.patterns for k in members],
-            [subs[k].lanes for k in members],
-            [upos[k] for k in members],
+            [subs[k].plan.patterns for _, k in fk],
+            [subs[k].lanes for _, k in fk],
+            [upos[k] for _, k in fk],
+            f_list,
             ncp,
             nt,
         )
@@ -852,68 +965,103 @@ class Broker:
             self._static_arrays_cache.popitem(last=False)
         return arrays
 
-    def _evaluate_group(
-        self, idxs: List[int], d_np: np.ndarray, a_np: np.ndarray
+    def _evaluate_frontiers(
+        self, fronts: List[_FrontierInput]
     ) -> Tuple[Dict[int, EvalOutputs], int]:
-        """One composed batch through every due cohort; atomic commit."""
+        """All fired frontiers through every due cohort; atomic commit.
+
+        The frontier axis is folded into each cohort's member axis: one
+        stacked bank pass covers every frontier's deleted side, and each
+        shape cohort runs ONE executable call spanning all frontiers it
+        fires from (members gather their frontier's slices via ``f_map``).
+        The round-trip baseline calls this with single-frontier lists, so
+        both paths share executables, statics, and commit discipline.
+        """
         subs = self.subs
         # matcher identity is baked into compiled steps, so it must be part
         # of every executable key (caches may be shared across brokers)
         mkey = id(self.matcher) if self.matcher is not None else None
         n_passes = 0  # counts abandoned overflow-retry attempts too
         while True:
-            for k in idxs:  # host-side capacity guard (per subscriber)
-                s = subs[k]
-                while (
-                    d_np.shape[0] > s.caps.n_removed
-                    or a_np.shape[0] > s.caps.n_added
-                ):
-                    s.recompile(s.caps.doubled())
-            for k in idxs:  # dictionary growth guard
-                if self.dictionary.id_capacity > subs[k].id_capacity:
-                    subs[k].recompile()
+            for fr in fronts:
+                for k in fr.idxs:  # host-side capacity guard
+                    s = subs[k]
+                    while (
+                        fr.d_rows > s.caps.n_removed
+                        or fr.a_rows > s.caps.n_added
+                    ):
+                        s.recompile(s.caps.doubled())
+                for k in fr.idxs:  # dictionary growth guard
+                    if self.dictionary.id_capacity > subs[k].id_capacity:
+                        subs[k].recompile()
             bank_dev = self._ensure_bank_dev()
             n_words_p = bank_dev.shape[0] // 32
 
-            cohorts: Dict[tuple, List[int]] = {}
-            for k in idxs:
-                s = subs[k]
-                key = (_plan_shape_key(s.plan), s.caps, s.id_capacity)
-                cohorts.setdefault(key, []).append(k)
+            all_idx = [k for fr in fronts for k in fr.idxs]
+            d_cap = max(subs[k].caps.n_removed for k in all_idx)
+            nf = len(fronts)
+            nfp = next_pow2(nf)
 
-            # fused pass 1: deleted side, shared by every cohort (sliced to
-            # each cohort's capacity so per-subscriber growth stays local)
-            d_cap = max(subs[k].caps.n_removed for k in idxs)
-            d_store, _ = from_array(jnp.asarray(d_np, jnp.int32), d_cap)
-            wkey = ("words", d_cap, n_words_p, mkey)
+            # fused pass 1: deleted side of EVERY frontier in one stacked
+            # bank pass (sliced per cohort so per-subscriber growth stays
+            # local); padding frontier slots carry empty stores
+            d_stores = [fr.d_store(d_cap) for fr in fronts]
+            d_spos = tuple(st.spo for st in d_stores) + (
+                _empty_cached(d_cap).spo,
+            ) * (nfp - nf)
+            wkey = ("words", d_cap, n_words_p, nfp, mkey)
             miss = wkey not in self._exec_cache
             words_fn = self._build_exec(
                 wkey,
                 lambda: jax.jit(
-                    lambda spo, b: kops.pattern_bitmask_words(
-                        spo, b, matcher=self.matcher
-                    )
+                    lambda spos, b: jax.vmap(
+                        lambda spo: kops.pattern_bitmask_words(
+                            spo, b, matcher=self.matcher
+                        )
+                    )(jnp.stack(spos))
                 ),
-                (d_store.spo, bank_dev),
+                (d_spos, bank_dev),
             )
             if miss:
                 self.words_compiles += 1
-            d_words_all = words_fn(d_store.spo, bank_dev)
+            d_words_all = words_fn(d_spos, bank_dev)  # (nfp, d_cap, W)
+
+            # per-frontier added sides, cached per cohort capacity
+            a_cache: Dict[Tuple[int, int], TripleStore] = {}
+
+            def a_of(fi: int, cap: int) -> TripleStore:
+                if (fi, cap) not in a_cache:
+                    a_cache[(fi, cap)] = fronts[fi].a_store(cap)
+                return a_cache[(fi, cap)]
+
+            cohorts: Dict[tuple, List[Tuple[int, int]]] = {}
+            for fi, fr in enumerate(fronts):
+                for k in fr.idxs:
+                    s = subs[k]
+                    key = (_plan_shape_key(s.plan), s.caps, s.id_capacity)
+                    cohorts.setdefault(key, []).append((fi, k))
 
             staged: Dict[int, Tuple[TripleStore, TripleStore]] = {}
             outs: Dict[int, EvalOutputs] = {}
             overflowed: List[int] = []
-            a_cache: Dict[int, TripleStore] = {}
-            for (skey, caps, id_cap), members in cohorts.items():
+            for (skey, caps, id_cap), fk in cohorts.items():
+                members = [k for _, k in fk]
                 rep = subs[members[0]]
                 nt = rep.plan.n_total
+                # frontier slots this cohort actually uses -> dense local
+                # slots, so the padded frontier axis stays minimal
+                fs_used = sorted({fi for fi, _ in fk})
+                fslot = {fi: i for i, fi in enumerate(fs_used)}
+                f_list = [fslot[fi] for fi, _ in fk]
+                nfc = len(fs_used)
+                nfcp = next_pow2(nfc)
                 # unique target replicas (shared-τ groups) in this cohort
                 ugroups: List[List[int]] = []
                 upos: Dict[int, int] = {}
                 seen: Dict[tuple, int] = {}
-                for k in members:
+                for fi, k in fk:
                     s = subs[k]
-                    gk = (id(s.share_tag), s.epoch)
+                    gk = (fi, id(s.share_tag), s.epoch)
                     if gk not in seen:
                         seen[gk] = len(ugroups)
                         ugroups.append([])
@@ -922,15 +1070,24 @@ class Broker:
                 nm, nu = len(members), len(ugroups)
                 ncp, nup = next_pow2(nm), next_pow2(nu)
 
-                d_c = TripleStore(
-                    spo=d_store.spo[: caps.n_removed], n=d_store.n
-                )
-                d_words_c = d_words_all[: caps.n_removed]
-                if caps.n_added not in a_cache:
-                    a_cache[caps.n_added], _ = from_array(
-                        jnp.asarray(a_np, jnp.int32), caps.n_added
+                d_sets = tuple(
+                    TripleStore(
+                        spo=d_stores[fi].spo[: caps.n_removed],
+                        n=d_stores[fi].n,
                     )
-                a_c = a_cache[caps.n_added]
+                    for fi in fs_used
+                ) + (_empty_cached(caps.n_removed),) * (nfcp - nfc)
+                d_words = tuple(
+                    d_words_all[fi, : caps.n_removed] for fi in fs_used
+                )
+                if nfcp > nfc:
+                    zero_w = jnp.zeros(
+                        (caps.n_removed, n_words_p), jnp.uint32
+                    )
+                    d_words = d_words + (zero_w,) * (nfcp - nfc)
+                a_sets = tuple(a_of(fi, caps.n_added) for fi in fs_used) + (
+                    _empty_cached(caps.n_added),
+                ) * (nfcp - nfc)
                 uniq_taus = tuple(subs[g[0]].tau for g in ugroups) + (
                     _empty_cached(caps.tau),
                 ) * (nup - nu)
@@ -938,17 +1095,19 @@ class Broker:
                     _empty_cached(caps.rho),
                 ) * (ncp - nm)
                 ckey = (
-                    "cohort", skey, caps, id_cap, ncp, nup, n_words_p, mkey,
+                    "cohort", skey, caps, id_cap, ncp, nup, nfcp,
+                    n_words_p, mkey,
                 )
-                tgt_map_d, pats_d, lanes_d, active_d = self._static_arrays(
-                    ckey, members, upos, ncp, nt
-                )
+                (
+                    f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
+                ) = self._static_arrays(ckey, fk, f_list, upos, ncp, nt)
                 args = (
-                    d_c,
-                    d_words_c,
-                    a_c,
+                    d_sets,
+                    d_words,
+                    a_sets,
                     bank_dev,
                     uniq_taus,
+                    f_map_d,
                     tgt_map_d,
                     rhos_c,
                     pats_d,
@@ -981,7 +1140,7 @@ class Broker:
 
             if overflowed:
                 # grow only the subscribers that overflowed, then re-run the
-                # whole group (staged updates are discarded: atomic commit)
+                # whole fire (staged updates are discarded: atomic commit)
                 for k in sorted(set(overflowed)):
                     subs[k].recompile(subs[k].caps.doubled())
                 continue

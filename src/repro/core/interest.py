@@ -184,9 +184,13 @@ class IncrementalPatternBank:
       rather than removed, so every other plan's lane map stays valid.
       Tombstoned lanes are reused first by later ``add_plan`` calls, which
       keeps re-subscription churn from growing the bank at all.
-    * ``maybe_compact`` renumbers only when tombstones dominate
-      (``compact_threshold``) — the caller applies the returned remap to all
-      live lane maps — so the padded device array can eventually shrink.
+    * ``maybe_compact`` renumbers only when doing so would actually shrink
+      the padded device bank shape (the padded-word boundary) — the caller
+      applies the returned remap to all live lane maps. Tombstone *count*
+      is irrelevant on its own: the bank array is padded to a power of two
+      and executables key on that padded shape, so a compaction that lands
+      in the same padded bucket would churn every live lane map (and every
+      cached static-array signature) for zero executable-shape benefit.
 
     ``patterns_padded`` pads the lane count to a power of two (min 32, i.e.
     whole uint32 bitset words) so the bank's *device shape* — part of every
@@ -197,12 +201,11 @@ class IncrementalPatternBank:
     broker uses it to refresh its device copy cheaply.
     """
 
-    def __init__(self, compact_threshold: float = 0.5):
+    def __init__(self):
         self._table: Dict[Tuple[int, int, int], int] = {}
         self._rows: List[Optional[Tuple[int, int, int]]] = []
         self._refs: List[int] = []
         self._free: List[int] = []  # tombstoned lanes, reused LIFO
-        self.compact_threshold = compact_threshold
         self.version = 0
 
     @property
@@ -261,14 +264,22 @@ class IncrementalPatternBank:
                 raise ValueError(f"lane {lane} released more than acquired")
 
     def maybe_compact(self, force: bool = False) -> Optional[Dict[int, int]]:
-        """Renumber away tombstones when they dominate the bank.
+        """Renumber away tombstones when that shrinks the padded bank shape.
+
+        Compaction is driven by the padded-word boundary, not the raw
+        tombstone fraction: it runs exactly when the live lanes would pad
+        to a strictly smaller power-of-two than the current allocation —
+        i.e. when it can actually shrink the executables' padded bank-word
+        input shapes (and therefore pays for invalidating lane maps).
+        ``force=True`` compacts whenever any tombstone exists.
 
         Returns the ``{old lane: new lane}`` remap (the caller must rewrite
         every live plan's lane map), or None when no compaction happened.
         """
-        n = len(self._rows)
-        if not self._free or (
-            not force and len(self._free) / n <= self.compact_threshold
+        if not self._free:
+            return None
+        if not force and (
+            next_pow2(max(32, self.n_live)) >= self.n_lanes_padded
         ):
             return None
         remap: Dict[int, int] = {}

@@ -167,6 +167,20 @@ class ChangesetBatch:
     subscriber whose push policy has deferred the same suffix of the stream
     shares one batch, so accumulation cost scales with the number of distinct
     cadences, not subscribers. Capacities double transparently on overflow.
+
+    **Device-resident contract.** Once composed (``n_changesets > 1``, or
+    after :meth:`device_stores`), the batch owns two lex-sorted, deduped
+    device :class:`~repro.core.triples.TripleStore` values at a power-of-two
+    ``capacity``; they are immutable between :meth:`extend` calls, and the
+    only host state kept alongside is bookkeeping (`first_id`/`last_id`,
+    ``n_changesets``) plus the valid-row counts behind :meth:`row_bounds`
+    (synced lazily — two device scalars read once per *fire*, never on the
+    per-changeset ingest path). A scheduled fire therefore consumes the batch without a
+    device→host→device round trip: :meth:`device_stores` hands the sorted
+    stores straight to the evaluator, which re-homes them with
+    :func:`repro.core.triples.rehome` (pad/slice, never re-sort) only when
+    a cohort's padded capacity differs. ``arrays()`` remains the host
+    escape hatch for the round-trip baseline path and external consumers.
     """
 
     removed: TripleStore | None  # composed D (device); None while n == 1
@@ -177,6 +191,11 @@ class ChangesetBatch:
     first_id: int
     last_id: int
     capacity: int
+    # valid rows of the composed stores, synced lazily by row_bounds()
+    # (None = stale); raw-row upper bounds while the batch holds one raw
+    # changeset
+    d_rows: int | None = None
+    a_rows: int | None = None
 
     @staticmethod
     def fresh(
@@ -205,6 +224,7 @@ class ChangesetBatch:
             )
             if not bool(ovf_d | ovf_a):
                 self.removed, self.added = d, a
+                self.d_rows = self.a_rows = None
                 return
             self.capacity *= 2
 
@@ -227,8 +247,31 @@ class ChangesetBatch:
                 break
             self.capacity *= 2
         self.removed, self.added = d, a
+        self.d_rows = self.a_rows = None  # synced lazily at fire time
         self.n_changesets += 1
         self.last_id = changeset_id
+
+    def row_bounds(self) -> Tuple[int, int]:
+        """(D rows, A rows) of the composed batch, for capacity guards.
+
+        Exact valid-row counts once composed (synced from the device
+        scalars on first use after an :meth:`extend`, i.e. once per fire);
+        raw-row upper bounds while the batch still holds a single raw
+        changeset.
+        """
+        if self.removed is None:
+            return int(self.removed_np.shape[0]), int(self.added_np.shape[0])
+        if self.d_rows is None:
+            self.d_rows = int(self.removed.n)
+            self.a_rows = int(self.added.n)
+        return self.d_rows, self.a_rows
+
+    def device_stores(self) -> Tuple[TripleStore, TripleStore]:
+        """The composed batch as device stores (D, A) — no host transfer
+        beyond the one-time upload of a single-changeset batch."""
+        if self.removed is None:
+            self._materialize()
+        return self.removed, self.added
 
     def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
         """The composed batch as dense host arrays (D, A)."""

@@ -217,6 +217,28 @@ def apply_changeset(store: TripleStore, removed: TripleStore, added: TripleStore
     return union(without, added, store.capacity)
 
 
+def rehome(store: TripleStore, capacity: int) -> TripleStore:
+    """Move a store to a new capacity WITHOUT re-sorting or host transfer.
+
+    Valid rows are already lex-sorted at the front with a PAD tail, so
+    growing pads more PAD rows and shrinking slices the front. Shrinking
+    requires ``store.n <= capacity`` (the broker's host-side capacity guard
+    enforces this before any device-resident re-home); rows past the new
+    capacity are then all PAD by construction.
+    """
+    c = store.spo.shape[0]
+    if c == capacity:
+        return store
+    if c < capacity:
+        spo = jnp.concatenate(
+            [store.spo, jnp.full((capacity - c, 3), PAD, dtype=jnp.int32)],
+            axis=0,
+        )
+    else:
+        spo = store.spo[:capacity]
+    return TripleStore(spo=spo, n=store.n)
+
+
 def to_numpy(store: TripleStore) -> np.ndarray:
     spo = np.asarray(store.spo)
     return spo[spo[:, 0] != PAD]

@@ -120,7 +120,11 @@ class DBpediaLikeGenerator:
         adds: List[Tuple[str, str, str]] = []
         removes: List[Tuple[str, str, str]] = []
 
-        live = list(self.current)
+        # sort before sampling: ``self.current`` is a Python set, and set
+        # iteration order varies with PYTHONHASHSEED across processes —
+        # sorting makes every stream a pure function of ``cfg.seed``, so
+        # benchmarks and examples reproduce run-to-run
+        live = sorted(self.current)
         # removals: random live triples + occasional whole-entity retirement
         if live:
             k = min(cfg.removes_per_changeset, len(live))
@@ -143,7 +147,9 @@ class DBpediaLikeGenerator:
         # goal updates for existing athletes (remove+add pattern)
         for _ in range(max(1, n_ath // 2)):
             a = self._athletes[rng.integers(len(self._athletes))]
-            old = [t for t in self.current if t[0] == a and t[1] == P_GOALS]
+            old = sorted(
+                t for t in self.current if t[0] == a and t[1] == P_GOALS
+            )
             removes += old
             adds.append((a, P_GOALS, str(int(rng.integers(0, 300)))))
         # bulk uninteresting churn
@@ -152,7 +158,7 @@ class DBpediaLikeGenerator:
             self._next_id += 1
             adds += self._other_triples(o)
 
-        removes = [t for t in set(removes) if t in self.current]
+        removes = [t for t in sorted(set(removes)) if t in self.current]
         adds = sorted(set(adds) - set(removes))
         self.current -= set(removes)
         self.current |= set(adds)

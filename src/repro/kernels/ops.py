@@ -54,32 +54,91 @@ def pattern_bitmask_words(
     matcher=None,
     use_kernel: bool | None = None,
 ) -> jax.Array:
-    """uint32[N, W] chunked bitset over an arbitrary-size pattern bank.
+    """uint32[N, W] multi-word bitset over an arbitrary-size pattern bank.
 
-    The triple_match kernel emits one uint32 bitset lane per pattern, capping
-    a single pass at 32 patterns. A multi-interest pattern bank can exceed
-    that, so the bank is split into ``W = ceil(P / 32)`` words: word ``w``
-    holds the match bits for ``patterns[32w : 32w + 32]``. Each word is one
-    fused matcher pass over ``spo`` — W HBM passes total, independent of how
-    many interests share the bank.
+    One uint32 bitset lane per pattern caps a single word at 32 patterns. A
+    multi-interest pattern bank can exceed that, so the bank spans
+    ``W = ceil(P / 32)`` words: word ``w`` holds the match bits for
+    ``patterns[32w : 32w + 32]``. All W words are produced by a SINGLE
+    fused pass over ``spo`` — the Pallas path emits them in one kernel
+    invocation (one HBM pass over the triple tiles regardless of bank
+    width), the XLA path packs one vectorized (N, P) match matrix.
 
     ``matcher`` (optional) must have the :func:`pattern_bitmask` signature;
     the broker threads its distribution/testing hook through here so the
-    fused path and the per-interest path route through the same primitive.
+    fused path and the per-interest path route through the same primitive —
+    with a custom matcher the bank falls back to one chunked pass per word.
     """
-    if matcher is None:
-        def matcher(s, p):
-            return pattern_bitmask(s, p, use_kernel=use_kernel)
     n_pat = patterns.shape[0]
-    n_words = max(1, -(-n_pat // 32))
-    words = []
-    for w in range(n_words):
-        chunk = patterns[w * 32 : (w + 1) * 32]
-        if chunk.shape[0] == 0:
-            words.append(jnp.zeros((spo.shape[0],), jnp.uint32))
-        else:
-            words.append(matcher(spo, chunk))
-    return jnp.stack(words, axis=1)
+    if matcher is not None:
+        n_words = max(1, -(-n_pat // 32))
+        words = []
+        for w in range(n_words):
+            chunk = patterns[w * 32 : (w + 1) * 32]
+            if chunk.shape[0] == 0:
+                words.append(jnp.zeros((spo.shape[0],), jnp.uint32))
+            else:
+                words.append(matcher(spo, chunk))
+        return jnp.stack(words, axis=1)
+    if n_pat == 0 or not _want_kernel(use_kernel):
+        return ref.pattern_bitmask_words_ref(spo, patterns)
+    tile = 128 * triple_match.BLOCK_ROWS
+    n = spo.shape[0]
+    n_pad = -n % tile
+    if n_pad:
+        spo = jnp.concatenate(
+            [spo, jnp.full((n_pad, 3), PAD, dtype=jnp.int32)], axis=0
+        )
+    out = triple_match.triple_match_words_pallas(
+        spo, patterns, interpret=not _on_tpu()
+    )
+    return out.T[:n]
+
+
+def pattern_lane_bits_batched(
+    spo_b: jax.Array,
+    patterns: jax.Array,
+    lanes: jax.Array,
+    active: jax.Array | None = None,
+    *,
+    matcher=None,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """uint32[R, N] fused bank match + lane routing for a member-stacked
+    cohort: member ``k``'s local pattern ``j`` reads bank lane
+    ``lanes[k, j]`` over its own rows ``spo_b[k]``; inactive (padding)
+    members produce all-zero bits.
+
+    Semantically ``lane_bits_batched(words_per_member, lanes, active)`` with
+    ``words_per_member = pattern_bitmask_words`` mapped over members — but
+    the Pallas path runs match + routing + masking in ONE kernel, so the
+    intermediate uint32[R, N, W] bank words never leave registers. With a
+    custom ``matcher`` the composed (unfused) pipeline is used so
+    distribution/testing hooks observe every bank pass.
+    """
+    if matcher is not None:
+        words = jax.vmap(
+            lambda s: pattern_bitmask_words(s, patterns, matcher=matcher)
+        )(spo_b)
+        return lane_bits_batched(words, lanes, active=active)
+    if patterns.shape[0] == 0 or not _want_kernel(use_kernel):
+        return ref.pattern_lane_bits_ref(spo_b, patterns, lanes, active)
+    r, n = spo_b.shape[0], spo_b.shape[1]
+    tile = 128 * triple_match.BLOCK_ROWS
+    n_pad = -n % tile
+    if n_pad:
+        spo_b = jnp.concatenate(
+            [spo_b, jnp.full((r, n_pad, 3), PAD, dtype=jnp.int32)], axis=1
+        )
+    act = (
+        jnp.ones((r, 1), jnp.int32)
+        if active is None
+        else active.astype(jnp.int32).reshape(r, 1)
+    )
+    out = triple_match.triple_match_lanes_pallas(
+        spo_b, patterns, lanes, act, interpret=not _on_tpu()
+    )
+    return out[:, :n]
 
 
 def lane_bits(words: jax.Array, lanes) -> jax.Array:

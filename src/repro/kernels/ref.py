@@ -26,6 +26,65 @@ def pattern_bitmask_ref(spo: jax.Array, patterns: jax.Array) -> jax.Array:
     return acc
 
 
+def pattern_bitmask_words_ref(spo: jax.Array, patterns: jax.Array) -> jax.Array:
+    """uint32[N, W] multi-word bank bitset: word ``w`` carries the match
+    bits of ``patterns[32w : 32w + 32]`` (W = ceil(P / 32), min 1).
+
+    Oracle for the single-invocation multi-word kernel
+    (:func:`repro.kernels.triple_match.triple_match_words_pallas`) and the
+    vectorized XLA fallback: one (N, P) match matrix packed into words,
+    bit-identical to chunked per-32-lane :func:`pattern_bitmask_ref` passes.
+    """
+    n = spo.shape[0]
+    n_pat = patterns.shape[0]
+    n_words = max(1, -(-n_pat // 32))
+    if n_pat == 0:
+        return jnp.zeros((n, n_words), jnp.uint32)
+    valid = spo[:, 0] != PAD
+    m = valid[:, None]
+    for k in range(3):
+        pk = patterns[:, k][None, :]
+        m = m & ((pk == WILDCARD) | (spo[:, k][:, None] == pk))
+    pad_p = n_words * 32 - n_pat
+    if pad_p:
+        m = jnp.concatenate([m, jnp.zeros((n, pad_p), bool)], axis=1)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        m.reshape(n, n_words, 32).astype(jnp.uint32) * weights[None, None, :],
+        axis=-1,
+        dtype=jnp.uint32,
+    )
+
+
+def pattern_lane_bits_ref(
+    spo_b: jax.Array,
+    patterns: jax.Array,
+    lanes: jax.Array,
+    active: jax.Array | None = None,
+) -> jax.Array:
+    """uint32[R, N] fused bank emit + lane routing + member mask oracle.
+
+    ``spo_b``: int32[R, N, 3] member-stacked rows; ``lanes``: int32[R, nt];
+    ``active`` (optional): bool[R]. Member k's local bit ``j`` is bank lane
+    ``lanes[k, j]``'s match bit over ``spo_b[k]``; inactive members are all
+    zeros. Oracle for
+    :func:`repro.kernels.triple_match.triple_match_lanes_pallas`.
+    """
+    words = jax.vmap(lambda s: pattern_bitmask_words_ref(s, patterns))(spo_b)
+    r, n, _ = words.shape
+    nt = lanes.shape[1]
+    word_idx = jnp.broadcast_to((lanes // 32)[:, None, :], (r, n, nt))
+    shift = (lanes % 32).astype(jnp.uint32)[:, None, :]
+    g = jnp.take_along_axis(words, word_idx, axis=2)
+    bits = ((g >> shift) & jnp.uint32(1)) << jnp.arange(nt, dtype=jnp.uint32)[
+        None, None, :
+    ]
+    out = jnp.sum(bits, axis=2, dtype=jnp.uint32)
+    if active is not None:
+        out = jnp.where(active[:, None], out, jnp.uint32(0))
+    return out
+
+
 def _lex_less(a: jax.Array, b: jax.Array) -> jax.Array:
     s_lt = a[..., 0] < b[..., 0]
     s_eq = a[..., 0] == b[..., 0]

@@ -1,16 +1,39 @@
-"""Pallas TPU kernel: fused multi-pattern triple matching (bitset emit).
+"""Pallas TPU kernels: fused multi-pattern triple matching (bitset emit).
 
-The iRap hot loop scans every changeset triple against all (<=32) triple
-patterns of the registered interests. On TPU we stream structure-of-arrays
-(s, p, o) tiles through VMEM and evaluate all patterns per tile on the VPU,
-emitting a uint32 bitset per triple — one HBM pass instead of one Jena index
-scan per pattern (DESIGN.md §2).
+The iRap hot loop scans every changeset triple against all registered triple
+patterns. On TPU we stream structure-of-arrays (s, p, o) tiles through VMEM
+and evaluate all patterns per tile on the VPU, emitting uint32 bitsets — one
+HBM pass over the triple columns instead of one Jena index scan per pattern
+(DESIGN.md §2). Three kernels share the tile layout and the unrolled
+pattern-compare loop (:func:`_match_words`):
 
-Layout: the ops wrapper reshapes the N-vector columns to (N // 128, 128) so
-tiles align with the (8, 128) vreg shape; the block is (BLOCK_ROWS, 128)
-= BLOCK_ROWS * 128 triples, 3 * 4B each -> VMEM footprint
-3 * BLOCK_ROWS * 512 B + out BLOCK_ROWS * 512 B (BLOCK_ROWS=32: ~64 KiB).
-Patterns are a tiny (P, 3) operand replicated to every block.
+* :func:`triple_match_pallas` — the original single-word kernel: <= 32
+  patterns, uint32[N] out.
+* :func:`triple_match_words_pallas` — multi-word bank emit: all
+  ``W = ceil(P / 32)`` bank words produced in ONE kernel invocation, i.e.
+  one HBM pass over the (s, p, o) tiles regardless of bank width,
+  uint32[W, N] out (the ops wrapper transposes to uint32[N, W]).
+* :func:`triple_match_lanes_pallas` — the broker's fully fused cohort path:
+  multi-word emit PLUS bitset-lane routing PLUS the member (padding-lane)
+  mask in one kernel. Each cohort member's triple tile is matched against
+  the whole bank and its local pattern bits are composed in registers, so
+  the intermediate uint32[N, W] bank words never touch HBM at all.
+
+Layout / VMEM math: the ops wrappers reshape the N-vector columns to
+(N // 128, 128) so tiles align with the (8, 128) vreg shape; a block is
+(BLOCK_ROWS, 128) = BLOCK_ROWS * 128 triples, 3 columns * 4 B each. Per grid
+step (BLOCK_ROWS = 32):
+
+  inputs   3 * BLOCK_ROWS * 512 B                    =  48 KiB
+  words    out W * BLOCK_ROWS * 512 B (word kernel)  =  16 KiB * W
+  lanes    out BLOCK_ROWS * 512 B (lane kernel)      =  16 KiB
+
+The W bank words of the multi-word block live in vector registers between
+the compare loop and the store/route step — VMEM holds only the triple tile
+and the final output block, so footprint grows with W only through the
+(tiny, replicated) ``(32 W, 3)`` pattern operand and the word-kernel output
+block. The lane-routing kernel additionally replicates the ``(R, nt)`` lane
+map and the ``(R, 1)`` member mask, reading one row per member grid step.
 """
 from __future__ import annotations
 
@@ -27,24 +50,76 @@ WILDCARD = np.int32(-1)
 BLOCK_ROWS = 32  # x 128 lanes = 4096 triples per block
 
 
-def _kernel(pat_ref, s_ref, p_ref, o_ref, out_ref, *, n_pat: int):
-    s = s_ref[...]
-    p = p_ref[...]
-    o = o_ref[...]
+def _match_words(pat_ref, s, p, o, n_pat: int):
+    """All ``ceil(n_pat / 32)`` uint32 bank words for one (s, p, o) tile.
+
+    Static unroll over the whole bank: every pattern compare reuses the same
+    three VMEM-resident columns, so the full multi-word emit costs one pass
+    over the tile. Returns a list of per-word uint32 accumulators (vreg
+    resident). Tombstoned / padding bank rows are all-PAD and can never
+    match a valid triple (PAD rows themselves are masked via ``valid``).
+    """
     valid = s != PAD
-    acc = jnp.zeros(s.shape, dtype=jnp.uint32)
-    for j in range(n_pat):  # static unroll: all patterns fused in one pass
-        ps = pat_ref[j, 0]
-        pp = pat_ref[j, 1]
-        po = pat_ref[j, 2]
-        m = (
-            valid
-            & ((ps == WILDCARD) | (s == ps))
-            & ((pp == WILDCARD) | (p == pp))
-            & ((po == WILDCARD) | (o == po))
-        )
-        acc = acc | (m.astype(jnp.uint32) << j)
-    out_ref[...] = acc
+    n_words = max(1, -(-n_pat // 32))
+    accs = []
+    for w in range(n_words):
+        acc = jnp.zeros(s.shape, dtype=jnp.uint32)
+        for j in range(w * 32, min(n_pat, w * 32 + 32)):
+            ps = pat_ref[j, 0]
+            pp = pat_ref[j, 1]
+            po = pat_ref[j, 2]
+            m = (
+                valid
+                & ((ps == WILDCARD) | (s == ps))
+                & ((pp == WILDCARD) | (p == pp))
+                & ((po == WILDCARD) | (o == po))
+            )
+            acc = acc | (m.astype(jnp.uint32) << (j - w * 32))
+        accs.append(acc)
+    return accs
+
+
+def _kernel(pat_ref, s_ref, p_ref, o_ref, out_ref, *, n_pat: int):
+    out_ref[...] = _match_words(pat_ref, s_ref[...], p_ref[...], o_ref[...], n_pat)[0]
+
+
+def _kernel_words(pat_ref, s_ref, p_ref, o_ref, out_ref, *, n_pat: int):
+    accs = _match_words(pat_ref, s_ref[...], p_ref[...], o_ref[...], n_pat)
+    for w, acc in enumerate(accs):
+        out_ref[w] = acc
+
+
+def _kernel_lanes(
+    pat_ref,
+    lanes_ref,
+    act_ref,
+    s_ref,
+    p_ref,
+    o_ref,
+    out_ref,
+    *,
+    n_pat: int,
+    n_tgt: int,
+):
+    """Fused bank emit + lane routing + member mask for ONE cohort member.
+
+    The member's lane map row arrives as a (1, n_tgt) block; bank words stay
+    in registers and each local pattern bit is selected out of its word via
+    a static unroll over the W words (lane values are traced, so the word
+    choice is a select chain, not a dynamic index).
+    """
+    accs = _match_words(pat_ref, s_ref[0], p_ref[0], o_ref[0], n_pat)
+    local = jnp.zeros(s_ref[0].shape, dtype=jnp.uint32)
+    for t in range(n_tgt):
+        lane = lanes_ref[0, t]
+        wi = lane // 32
+        sh = (lane % 32).astype(jnp.uint32)
+        word = accs[0]
+        for w in range(1, len(accs)):
+            word = jnp.where(wi == w, accs[w], word)
+        local = local | (((word >> sh) & jnp.uint32(1)) << jnp.uint32(t))
+    active = act_ref[0, 0] != 0
+    out_ref[0] = jnp.where(active, local, jnp.zeros_like(local))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -74,3 +149,82 @@ def triple_match_pallas(spo: jax.Array, patterns: jax.Array, *, interpret: bool 
         interpret=interpret,
     )(patterns, s2, p2, o2)
     return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def triple_match_words_pallas(
+    spo: jax.Array, patterns: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """uint32[W, N] multi-word bank bitset in one kernel invocation.
+
+    ``W = ceil(P / 32)`` (min 1): word ``w`` carries the match bits of
+    ``patterns[32w : 32w + 32]``. One HBM pass over the (s, p, o) tiles
+    regardless of bank width; N must be a multiple of 128 * BLOCK_ROWS.
+    """
+    n = spo.shape[0]
+    n_pat = patterns.shape[0]
+    n_words = max(1, -(-n_pat // 32))
+    assert n % (128 * BLOCK_ROWS) == 0, n
+    rows = n // 128
+    s2 = spo[:, 0].reshape(rows, 128)
+    p2 = spo[:, 1].reshape(rows, 128)
+    o2 = spo[:, 2].reshape(rows, 128)
+
+    grid = (rows // BLOCK_ROWS,)
+    col_spec = pl.BlockSpec((BLOCK_ROWS, 128), lambda i: (i, 0))
+    pat_spec = pl.BlockSpec((max(1, n_pat), 3), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((n_words, BLOCK_ROWS, 128), lambda i: (0, i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_words, n_pat=n_pat),
+        grid=grid,
+        in_specs=[pat_spec, col_spec, col_spec, col_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_words, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(patterns, s2, p2, o2)
+    return out.reshape(n_words, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def triple_match_lanes_pallas(
+    spo_b: jax.Array,
+    patterns: jax.Array,
+    lanes: jax.Array,
+    active: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """uint32[R, N] fused multi-word emit + lane routing for a cohort.
+
+    ``spo_b``: int32[R, N, 3] member-stacked triple rows; ``lanes``:
+    int32[R, nt] member k's local pattern j reads bank lane ``lanes[k, j]``;
+    ``active``: int32[R, 1] member mask (0 = padding lane, bits forced to
+    zero). Equivalent to emitting the bank words per member and routing via
+    :func:`repro.kernels.ops.lane_bits_batched`, minus the HBM round trip of
+    the intermediate words. N must be a multiple of 128 * BLOCK_ROWS.
+    """
+    r, n = spo_b.shape[0], spo_b.shape[1]
+    n_pat = patterns.shape[0]
+    n_tgt = lanes.shape[1]
+    assert n % (128 * BLOCK_ROWS) == 0, n
+    rows = n // 128
+    s2 = spo_b[:, :, 0].reshape(r, rows, 128)
+    p2 = spo_b[:, :, 1].reshape(r, rows, 128)
+    o2 = spo_b[:, :, 2].reshape(r, rows, 128)
+
+    grid = (r, rows // BLOCK_ROWS)
+    col_spec = pl.BlockSpec((1, BLOCK_ROWS, 128), lambda k, i: (k, i, 0))
+    pat_spec = pl.BlockSpec((max(1, n_pat), 3), lambda k, i: (0, 0))
+    lane_spec = pl.BlockSpec((1, n_tgt), lambda k, i: (k, 0))
+    act_spec = pl.BlockSpec((1, 1), lambda k, i: (k, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_lanes, n_pat=n_pat, n_tgt=n_tgt),
+        grid=grid,
+        in_specs=[pat_spec, lane_spec, act_spec, col_spec, col_spec, col_spec],
+        out_specs=col_spec,
+        out_shape=jax.ShapeDtypeStruct((r, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(patterns, lanes, active, s2, p2, o2)
+    return out.reshape(r, n)

@@ -1,0 +1,212 @@
+"""Device-resident deferred evaluation == the host-round-trip baseline.
+
+The PR 2 deferred path pulled every composed batch device→host and
+re-uploaded it per fire, running one sequential pass per frontier. The
+device-resident path consumes the batches' sorted device stores directly
+and stacks same-shape cohorts across frontiers into one executable call.
+Outputs (and all replica state) must stay bit-identical between the two —
+and therefore to eager evaluation of the composed batches, which
+tests/test_broker_scheduling.py pins against the round-trip path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    PushPolicy,
+    StepCapacities,
+)
+
+A = "rdf:type"
+CAPS = StepCapacities(n_removed=16, n_added=16, tau=64, rho=64, pulls=32)
+
+
+def _exprs():
+    return [
+        InterestExpr.parse(
+            "g", "t0", bgp=[("?a", A, "c:Athlete"), ("?a", "p:goals", "?v")]
+        ),
+        InterestExpr.parse(
+            "g", "t1", bgp=[("?a", A, "c:Team"), ("?a", "p:rank", "?v")]
+        ),
+        InterestExpr.parse("g", "t2", bgp=[("?a", "p:goals", "?v")]),
+    ]
+
+
+def _universe():
+    d = Dictionary()
+    tau0 = d.encode_triples(
+        [
+            ("e:1", A, "c:Athlete"),
+            ("e:1", "p:goals", "10"),
+            ("e:2", A, "c:Team"),
+        ]
+    )
+    return d, tau0
+
+
+def _stream(d, n, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def rows(k):
+        out = set()
+        for _ in range(k):
+            e = f"e:{rng.integers(0, 9)}"
+            kind = rng.integers(0, 4)
+            if kind == 0:
+                out.add((e, A, f"c:{['Athlete', 'Team'][rng.integers(2)]}"))
+            elif kind == 1:
+                out.add((e, "p:goals", str(int(rng.integers(0, 30)))))
+            elif kind == 2:
+                out.add((e, "p:rank", str(int(rng.integers(0, 5)))))
+            else:
+                out.add((e, "p:noise", f"o{rng.integers(0, 6)}"))
+        return d.encode_triples(sorted(out))
+
+    return [
+        (rows(int(rng.integers(0, 5))), rows(int(rng.integers(1, 7))))
+        for _ in range(n)
+    ]
+
+
+def _twin_brokers(d, tau0, policies):
+    """Two brokers over one dictionary: device-resident vs round-trip."""
+    dev = Broker(d, deferred_device_resident=True)
+    rtt = Broker(d, deferred_device_resident=False)
+    exprs = _exprs()
+    for i, pol in enumerate(policies):
+        expr = exprs[i % len(exprs)]
+        dev.subscribe(expr, CAPS, initial_target=tau0, policy=pol)
+        rtt.subscribe(expr, CAPS, initial_target=tau0, policy=pol)
+    return dev, rtt
+
+
+def assert_results_identical(got, want, label):
+    assert len(got) == len(want), label
+    for k, (g, w) in enumerate(zip(got, want)):
+        assert (g is None) == (w is None), (label, k)
+        if g is None:
+            continue
+        for field in ("r", "r_i", "r_prime", "a", "a_i"):
+            gf, wf = getattr(g, field), getattr(w, field)
+            assert np.array_equal(
+                np.asarray(gf.spo), np.asarray(wf.spo)
+            ), (label, k, field)
+            assert int(gf.n) == int(wf.n), (label, k, field)
+
+
+def assert_states_identical(dev, rtt, label):
+    for k, (sd, sr) in enumerate(zip(dev.subs, rtt.subs)):
+        assert np.array_equal(
+            np.asarray(sd.tau.spo), np.asarray(sr.tau.spo)
+        ), (label, k, "tau")
+        assert np.array_equal(
+            np.asarray(sd.rho.spo), np.asarray(sr.rho.spo)
+        ), (label, k, "rho")
+        assert sd.since == sr.since, (label, k)
+
+
+def test_device_resident_matches_round_trip_golden():
+    """Mixed cadences (eager / every-2 / every-3) through both paths stay
+    bit-identical step by step, and a multi-frontier flush stacks the
+    same-shape cohorts into fewer passes than the sequential baseline."""
+    d, tau0 = _universe()
+    dev, rtt = _twin_brokers(
+        d,
+        tau0,
+        [
+            PushPolicy(),  # eager
+            PushPolicy.every(2),
+            PushPolicy.every(3),
+            PushPolicy.every(3),  # same shape as sub 0 family, slow lane
+        ],
+    )
+    for i, cs in enumerate(_stream(d, 5, seed=1)):
+        got = dev.process_changeset(*cs)
+        want = rtt.process_changeset(*cs)
+        assert_results_identical(got, want, ("step", i))
+        assert_states_identical(dev, rtt, ("step", i))
+
+    # leave two distinct frontiers pending, then drain both paths at once
+    got = dev.flush()
+    want = rtt.flush()
+    assert_results_identical(got, want, "flush")
+    assert_states_identical(dev, rtt, "flush")
+    if dev.stats and rtt.stats:
+        dev_passes = dev.stats[-1].n_cohort_passes
+        rtt_passes = rtt.stats[-1].n_cohort_passes
+        assert dev_passes <= rtt_passes
+
+    # nothing pending: both flushes are no-ops
+    assert dev.flush() == [None] * len(dev.subs)
+    assert rtt.flush() == [None] * len(rtt.subs)
+
+
+def test_multi_frontier_flush_stacks_same_shape_cohorts():
+    """Two same-shape subscribers stuck at different frontiers drain in ONE
+    stacked cohort pass on the device-resident path (two sequentially on
+    the baseline), with identical outputs."""
+    d, tau0 = _universe()
+    expr = _exprs()[0]
+    # pre-encode the stream so the dictionary (and with it id_capacity,
+    # part of the cohort key) is identical for both subscriptions
+    stream = _stream(d, 4, seed=2)
+    dev = Broker(d, deferred_device_resident=True)
+    rtt = Broker(d, deferred_device_resident=False)
+    for b in (dev, rtt):
+        b.subscribe(
+            expr, CAPS, initial_target=tau0, policy=PushPolicy.max_staleness(1e9)
+        )
+    for b in (dev, rtt):
+        b.process_changeset(*stream[0])
+        # second subscriber arrives mid-stream: its frontier starts later
+        b.subscribe(
+            expr, CAPS, initial_target=tau0, policy=PushPolicy.max_staleness(1e9)
+        )
+        for cs in stream[1:]:
+            b.process_changeset(*cs)
+
+    got, want = dev.flush(), rtt.flush()
+    assert_results_identical(got, want, "stacked flush")
+    assert_states_identical(dev, rtt, "stacked flush")
+    # both subscribers share one shape cohort: the stacked path folds the
+    # two frontiers into a single executable call
+    assert dev.stats[-1].n_cohort_passes == 1
+    assert rtt.stats[-1].n_cohort_passes == 2
+
+
+def test_device_resident_property_random_streams():
+    """Hypothesis sweep: random policies + random streams stay bit-identical
+    between the device-resident and round-trip paths, including flushes."""
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+    )
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(
+        seed=st.integers(0, 2**16),
+        ks=st.lists(st.integers(1, 4), min_size=2, max_size=4),
+        n_steps=st.integers(2, 6),
+    )
+    @settings(
+        max_examples=10,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def prop(seed, ks, n_steps):
+        d, tau0 = _universe()
+        dev, rtt = _twin_brokers(
+            d, tau0, [PushPolicy.every(k) for k in ks]
+        )
+        for i, cs in enumerate(_stream(d, n_steps, seed=seed)):
+            got = dev.process_changeset(*cs)
+            want = rtt.process_changeset(*cs)
+            assert_results_identical(got, want, ("step", i))
+        got, want = dev.flush(), rtt.flush()
+        assert_results_identical(got, want, "flush")
+        assert_states_identical(dev, rtt, "final")
+
+    prop()

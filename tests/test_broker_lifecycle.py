@@ -249,6 +249,8 @@ def test_incremental_bank_stable_lanes_and_tombstones():
 
 
 def test_incremental_bank_compaction_remap():
+    """Below the 32-lane padded floor compaction cannot shrink the device
+    bank shape, so it only runs when forced; the remap is still exact."""
     d = Dictionary()
     bank = IncrementalPatternBank()
     plans = [_plan(d, f"c:{i}", f"p:{i}") for i in range(4)]
@@ -256,14 +258,41 @@ def test_incremental_bank_compaction_remap():
     for ln in lanes[:3]:
         bank.remove_plan(ln)
     assert bank.n_live == 2  # survivor's two patterns
-    remap = bank.maybe_compact()
+    # 8 allocated lanes pad to the 32-lane floor either way: no shape win,
+    # so the padded-boundary policy declines to churn the lane maps
+    assert bank.maybe_compact() is None
+    remap = bank.maybe_compact(force=True)
     assert remap is not None
     new_lanes = tuple(remap[l] for l in lanes[3])
     assert set(new_lanes) == {0, 1}
     assert np.array_equal(
         bank.patterns_padded()[list(new_lanes)], plans[3].patterns
     )
-    assert bank.maybe_compact() is None  # idempotent
+    assert bank.maybe_compact(force=True) is None  # idempotent
+
+
+def test_compaction_fires_only_on_padded_boundary_shrink():
+    """Compaction triggers exactly when live lanes pad to a strictly
+    smaller power-of-two than the current allocation — i.e. when it can
+    shrink executables' padded bank-word input shapes."""
+    d = Dictionary()
+    bank = IncrementalPatternBank()
+    plans = [_plan(d, f"c:{i}", f"p:{i}") for i in range(17)]
+    lanes = [bank.add_plan(p) for p in plans]
+    assert bank.n_lanes == 34 and bank.n_lanes_padded == 64
+    # removing one plan leaves 32 live lanes in a 64-padded bank: the
+    # padded shape can halve, so compaction fires and shrinks it
+    bank.remove_plan(lanes[0])
+    assert bank.n_live == 32
+    remap = bank.maybe_compact()
+    assert remap is not None
+    assert bank.n_lanes == 32 and bank.n_lanes_padded == 32
+    for ln, plan in zip(lanes[1:], plans[1:]):
+        new = [remap[l] for l in ln]
+        assert np.array_equal(bank.patterns_padded()[new], plan.patterns)
+    # further removals cannot shrink below the 32-lane floor: no compaction
+    bank.remove_plan(tuple(remap[l] for l in lanes[1]))
+    assert bank.maybe_compact() is None
 
 
 def test_incremental_bank_matches_batch_build():
