@@ -1,0 +1,207 @@
+"""Sharded vs single-device broker flush throughput on an 8-device mesh.
+
+Drives identical deferred workloads — ``n_subs`` subscribers over several
+shape cohorts, half flushed early so every full flush drains TWO distinct
+consumption frontiers — through three brokers:
+
+  * single  — no mesh (the PR 3 device-resident broker),
+  * placed  — ``Broker(mesh=...)``: cohorts placed on mesh devices
+              (``CohortPlacement`` round-robin), frontier passes dispatched
+              grouped by device so cohorts run concurrently,
+  * sharded — ``Broker(mesh=..., shard_cohorts=True)``: every cohort pass
+              inside shard_map (hash-partitioned τ shards, all_to_all-routed
+              probes, block-gather-stitched bank words).
+
+Before timing, one warm round asserts all three paths' flush outputs
+bit-identical to each other AND to eager evaluation of the same composed
+batches by the seed per-interest engine. Reported: flush seconds per round
+(compile time excluded via ``BrokerStats.rejit_s``), cohort passes per
+device (``Broker.device_passes``), and sharded/placed vs single speedups.
+Emits ``experiments/bench/BENCH_shard.json``.
+
+The forced host-device mesh requires ``XLA_FLAGS`` before jax initializes,
+so the measurement runs in a child process
+(``--xla_force_host_platform_device_count=8``); on a CPU host mesh the
+collectives are emulated and the sharded path's value is architectural
+(memory scale-out + the routing overhead trend), not raw speed — the
+recorded ratio quantifies exactly that overhead.
+
+    PYTHONPATH=src python -m benchmarks.run --only shard
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+N_DEVICES = 8
+_MARK = "BENCH_SHARD_JSON:"
+
+
+def _child(scale: float, n_subs: int, n_rounds: int, per_round: int) -> None:
+    from repro.core import (
+        Broker,
+        CohortPlacement,
+        Dictionary,
+        IrapEngine,
+        PushPolicy,
+    )
+    from repro.core.distributed import make_mesh_compat
+
+    from benchmarks.broker_flush import (
+        _assert_outputs_equal,
+        _caps,
+        _composed,
+        _interest,
+        _stream,
+    )
+
+    mesh = make_mesh_compat((N_DEVICES,), ("shard",))
+
+    def build(name: str):
+        d = Dictionary()
+        stream = _stream(d, 2 * per_round * (n_rounds + 1), seed=0)
+        if name == "single":
+            broker = Broker(d)
+        elif name == "placed":
+            broker = Broker(
+                d, mesh=mesh, placement=CohortPlacement(mode="round_robin")
+            )
+        else:
+            broker = Broker(d, mesh=mesh, shard_cohorts=True)
+        policy = PushPolicy.max_staleness(1e9)  # only explicit flush fires
+        subs = [
+            broker.subscribe(_interest(i), _caps(), policy=policy)
+            for i in range(n_subs)
+        ]
+        return broker, subs, stream
+
+    brokers = {name: build(name) for name in ("single", "placed", "sharded")}
+
+    # -- warm + parity round: all paths vs eager composed-batch evaluation
+    flushed = {}
+    for name, (broker, subs, stream) in brokers.items():
+        for cs in stream[: 2 * per_round]:
+            broker.process_changeset(*cs)
+        flushed[name] = broker.flush()
+    d_ref = Dictionary()
+    ref_stream = _stream(d_ref, 2 * per_round, seed=0)
+    engine = IrapEngine(d_ref)
+    refs = [
+        engine.register_interest(_interest(i), _caps())
+        for i in range(n_subs)
+    ]
+    d_np, a_np = _composed(ref_stream)
+    for k, ref in enumerate(refs):
+        want = ref.apply(d_np, a_np)
+        for name in brokers:
+            _assert_outputs_equal(flushed[name][k], want, f"{name}/{k}")
+
+    # -- timed rounds (steady state: executables, statics, τ shards cached)
+    results = {}
+    for name, (broker, subs, stream) in brokers.items():
+        half = subs[: len(subs) // 2]
+        it = iter(stream[2 * per_round :])
+        warm_stats = len(broker.stats)
+        passes_before = dict(broker.device_passes)
+        for _ in range(n_rounds):
+            for _ in range(per_round):
+                broker.process_changeset(*next(it))
+            broker.flush(subs=half)
+            for _ in range(per_round):
+                broker.process_changeset(*next(it))
+            broker.flush()
+        flush_stats = [
+            st for st in broker.stats[warm_stats:] if st.total_added == 0
+        ]
+        eval_s = sum(st.elapsed_s - st.rejit_s for st in flush_stats)
+        results[name] = {
+            "n_flushes": len(flush_stats),
+            "flush_eval_s": eval_s,
+            "flush_eval_s_per_round": eval_s / max(1, n_rounds),
+            "cohort_passes": sum(st.n_cohort_passes for st in flush_stats),
+            "rejit_s": sum(st.rejit_s for st in broker.stats[warm_stats:]),
+            "device_passes": {
+                str(dev): n - passes_before.get(dev, 0)
+                for dev, n in sorted(broker.device_passes.items())
+            },
+            "n_subscribers": n_subs,
+            "changesets_per_round": 2 * per_round,
+        }
+
+    single_s = results["single"]["flush_eval_s"]
+    payload = {
+        "n_devices": N_DEVICES,
+        "single_device": results["single"],
+        "placed": results["placed"],
+        "sharded": results["sharded"],
+        "sharded_vs_single_speedup": single_s
+        / max(1e-9, results["sharded"]["flush_eval_s"]),
+        "placed_vs_single_speedup": single_s
+        / max(1e-9, results["placed"]["flush_eval_s"]),
+        "parity": {
+            "bit_identical_to_single_device": True,
+            "checked_against_eager_composed_batches": True,
+            "subscribers_checked": n_subs,
+        },
+        "scale": scale,
+    }
+    print(_MARK + json.dumps(payload), flush=True)
+
+
+def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 4,
+        per_round: int = 3) -> str:
+    from .common import csv_row, save_json
+
+    env = dict(os.environ)
+    # overwrite rather than append: with repeated flags XLA honors the last
+    # occurrence, so an inherited --xla_force_host_platform_device_count
+    # (e.g. the CI mesh-test step's =4) would override the 8-device mesh
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_DEVICES}"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = (
+        src + os.pathsep
+        + os.path.dirname(os.path.dirname(__file__))
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "benchmarks.broker_shard", "--child",
+            str(scale), str(n_subs), str(n_rounds), str(per_round),
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=3600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"broker_shard child failed:\n{proc.stdout[-2000:]}"
+            f"\n{proc.stderr[-2000:]}"
+        )
+    line = next(
+        ln for ln in proc.stdout.splitlines() if ln.startswith(_MARK)
+    )
+    payload = json.loads(line[len(_MARK):])
+    save_json("BENCH_shard", payload)
+    us = payload["sharded"]["flush_eval_s_per_round"] * 1e6
+    return csv_row(
+        "broker_shard",
+        us,
+        f"shard_x={payload['sharded_vs_single_speedup']:.2f};"
+        f"placed_x={payload['placed_vs_single_speedup']:.2f};"
+        f"devs={N_DEVICES};subs={payload['sharded']['n_subscribers']}",
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        _child(
+            float(sys.argv[2]), int(sys.argv[3]),
+            int(sys.argv[4]), int(sys.argv[5]),
+        )
+    else:
+        print(run())

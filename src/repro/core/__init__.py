@@ -14,8 +14,10 @@ from .broker import (
     PushPolicy,
     make_broker_step,
     make_cohort_step,
+    make_sharded_cohort_step,
 )
 from .dictionary import Dictionary, parse_triples
+from .distributed import CohortPlacement
 from .interest import (
     CompiledInterest,
     IncrementalPatternBank,
@@ -58,6 +60,8 @@ __all__ = [
     "PushPolicy",
     "make_broker_step",
     "make_cohort_step",
+    "make_sharded_cohort_step",
+    "CohortPlacement",
     "Dictionary",
     "parse_triples",
     "CompiledInterest",

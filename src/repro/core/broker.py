@@ -7,7 +7,7 @@ per-changeset scan across subscribers with a single fused jitted step; this
 module additionally amortizes the *lifecycle*: subscribers come and go, and
 none of that churn may recompile work that belongs to other subscribers.
 
-The broker is three layers:
+The broker is three layers, plus a distribution layer over them:
 
 1. **Cohort executable cache.** Subscribers whose interests share the same
    static plan shape (pattern kinds/slots/const-masks, Definition 7
@@ -54,6 +54,26 @@ The broker is three layers:
    share_target=True)``) share a single ``build_index(τ)`` inside the
    cohort step.
 
+4. **Device-sharded cohort routing.** Cohorts are independently compiled,
+   independently schedulable units, which makes them the natural unit of
+   *distribution*: with ``Broker(mesh=...)`` a
+   :class:`~repro.core.distributed.CohortPlacement` policy places each
+   cohort on a mesh device (round-robin, load-balanced by padded member
+   count, or pinned) and the frontier pass dispatches its cohort calls
+   grouped by device — executables, statics, the padded bank copy, and
+   every member's τ/ρ state stay resident per device, so steady-state
+   fires move only the frontier's changeset slices and the asynchronously
+   dispatched cohorts run concurrently across the mesh. With
+   ``shard_cohorts=True`` each cohort pass instead runs *inside* shard_map
+   over the whole mesh (:func:`make_sharded_cohort_step`): τ replicas
+   hash-partition across the shards (cached per (subscription, τ-version,
+   capacity), so churn never re-partitions untouched replicas), the bank
+   match passes block-split and block-gather-stitched, and candidate probes
+   route to their owner shard via the batched all_to_all probe. Both modes
+   are bit-identical to the single-device broker by construction; the
+   per-frontier composed batches remain the delivery windows — the natural
+   cross-host boundary.
+
 Downstream of the bitmask every subscriber runs the *same* traced
 computation as the single-interest path — the side evaluators of
 :mod:`repro.core.evaluation` (π / π', Definitions 11-12) with precomputed
@@ -89,10 +109,20 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops as kops
 from .dictionary import Dictionary
+from .distributed import (
+    CohortPlacement,
+    make_or_reduce,
+    make_routed_probe_batched,
+    prepare_target_shards,
+    shard_map_compat,
+)
 from .evaluation import (
+    SideResult,
+    TripleIndex,
     build_index,
     make_side_evaluator,
     tree_gather,
@@ -113,7 +143,15 @@ from .propagation import (
     StepCapacities,
     combine_side_results,
 )
-from .triples import PAD, TripleStore, empty, from_array, rehome, union
+from .triples import (
+    PAD,
+    TripleStore,
+    empty,
+    from_array,
+    rehome,
+    to_numpy,
+    union,
+)
 
 
 def _plan_shape_key(plan: CompiledInterest):
@@ -322,6 +360,233 @@ def make_cohort_step(
     return step
 
 
+def make_sharded_cohort_step(
+    plan: CompiledInterest,
+    caps: StepCapacities,
+    id_capacity: int,
+    mesh,
+    *,
+    axis: str,
+    n_shards: int,
+    matcher: Optional[Callable] = None,
+) -> Callable:
+    """:func:`make_cohort_step` with the member evaluations inside shard_map.
+
+    One cohort pass — all frontiers, all members — distributed over the
+    whole mesh, bit-identical to the single-device step by construction:
+
+    * each member's **τ replica is hash-partitioned** across the shards
+      (SPO by subject, OPS by object — ``distributed.prepare_target_shards``,
+      host-prepared and cached by the broker per (subscription, capacity));
+      candidate-assertion probes route to the owner shard via the batched
+      all_to_all probe (``distributed.make_routed_probe_batched``, one
+      collective per hop spanning the whole member axis).  The partition key
+      equals the probe's bound slot, so the owner holds the complete prefix
+      range and even the fanout truncation order matches the unpartitioned
+      index;
+    * the **changeset rows stay replicated** but every shard *owns* only the
+      rows whose subject hashes to it: the bank match passes are block-sliced
+      across shards (1/n_shards of the match work each), the blocks
+      all_gathered and stitched back at static offsets, then each shard
+      zeroes the bits of rows it does not own (``row_mask`` in
+      :func:`repro.kernels.ops.lane_bits_batched`).  Zero bits mean a row
+      contributes no candidates, no signature scatters, and no outputs, so
+      the masks partition the whole downstream evaluation without reshaping
+      any executable input;
+    * signature / edge tables OR-reduce across shards
+      (``table_reduce`` hook), so gating decisions are global while
+      candidate generation and classification stay shard-local;
+    * per-shard outputs re-enter canonical form through one
+      ``from_array`` per member (sorted + deduped + compacted), which erases
+      the shard decomposition entirely — the merged stores, Δ/Υ algebra, and
+      overflow flags match the single-device cohort step bit for bit.
+
+    Signature matches :func:`make_cohort_step` except that the bank words
+    are computed in-graph (no ``d_words`` operand) and the per-member τ
+    partitions ride alongside the full replicas (which Υ still needs)::
+
+        step(d_sets, a_sets, bank_dev, uniq_taus,
+             uniq_tau_spo,   # int32[Nu, n_shards, t_cap, 3] subject-hashed
+             uniq_tau_ops,   # int32[Nu, n_shards, t_cap, 3] object-hashed
+             f_map, tgt_map, rhos, pats, lanes, active)
+          -> (tau1s, rho1s, outs)
+
+    Candidate dedup (``caps.dedup_candidates``) is rejected here: its pool
+    overflow is counted per shard over shard-local candidate subsets, so a
+    global pool overflow that no single shard sees would skip the broker's
+    capacity-doubling retry and break bit-identity exactly in the overflow
+    regime. Sharded dedup needs a count-reduce hook (ROADMAP follow-on).
+    """
+    if caps.dedup_candidates:
+        raise ValueError(
+            "sharded cohort evaluation requires dedup_candidates == 0 "
+            "(per-shard pools cannot detect global dedup overflow)"
+        )
+    eval_kw = dict(
+        id_capacity=id_capacity,
+        fanout=caps.fanout,
+        pull_capacity=caps.pulls,
+        matcher=matcher,
+        dedup_candidates=caps.dedup_candidates,
+        dynamic_patterns=True,
+        probe_impl=make_routed_probe_batched(axis, n_shards),
+        table_reduce=make_or_reduce(axis),
+    )
+    eval_d = make_side_evaluator(plan, out_capacity=caps.n_removed, **eval_kw)
+    eval_a = make_side_evaluator(plan, out_capacity=caps.n_i, **eval_kw)
+
+    def shard_body(
+        d_spo, d_ns, i_spo, i_ns, uq_spo, uq_ops,
+        bank, f_map, tgt_map, pats, lanes, active,
+    ):
+        my = jax.lax.axis_index(axis)
+        nfp, d_cap = d_spo.shape[0], d_spo.shape[1]
+        n_i_cap = i_spo.shape[1]
+
+        # deleted-side bank words: each shard matches one row block; the
+        # blocks all_gather at 1/n_shards the full-tensor volume and stitch
+        # back at static offsets (the tail shards' clamped blocks overlap,
+        # but overlapping rows carry identical words, so overwrite is exact)
+        blk_d = -(-d_cap // n_shards)
+        starts_d = [min(i * blk_d, d_cap - blk_d) for i in range(n_shards)]
+        d_loc = jax.lax.dynamic_slice_in_dim(d_spo, my * blk_d, blk_d, axis=1)
+        w_loc = jax.vmap(
+            lambda s: kops.pattern_bitmask_words(s, bank, matcher=matcher)
+        )(d_loc)
+        w_gather = jax.lax.all_gather(w_loc, axis)  # (n, nfp, blk_d, W)
+        d_words = jnp.zeros((nfp, d_cap, w_loc.shape[-1]), jnp.uint32)
+        for i in range(n_shards):
+            d_words = jax.lax.dynamic_update_slice_in_dim(
+                d_words, w_gather[i], starts_d[i], axis=1
+            )
+
+        # per-member views + subject-hash ownership masks
+        d_mem_spo = jnp.take(d_spo, f_map, axis=0)
+        own_d = (d_mem_spo[:, :, 0] != PAD) & (
+            d_mem_spo[:, :, 0] % n_shards == my
+        )
+        d_bits = kops.lane_bits_batched(
+            jnp.take(d_words, f_map, axis=0), lanes,
+            active=active, row_mask=own_d,
+        )
+
+        # added side: block-sliced fused match+route, block-gathered and
+        # stitched like the words, then ownership-masked (the per-shard
+        # masked lane-bits discipline)
+        blk_i = -(-n_i_cap // n_shards)
+        starts_i = [min(i * blk_i, n_i_cap - blk_i) for i in range(n_shards)]
+        i_loc = jax.lax.dynamic_slice_in_dim(i_spo, my * blk_i, blk_i, axis=1)
+        a_loc = kops.pattern_lane_bits_batched(
+            i_loc, bank, lanes, active, matcher=matcher
+        )
+        a_gather = jax.lax.all_gather(a_loc, axis)  # (n, Nc, blk_i)
+        a_full = jnp.zeros((i_spo.shape[0], n_i_cap), jnp.uint32)
+        for i in range(n_shards):
+            a_full = jax.lax.dynamic_update_slice(
+                a_full, a_gather[i], (0, starts_i[i])
+            )
+        own_i = (i_spo[:, :, 0] != PAD) & (i_spo[:, :, 0] % n_shards == my)
+        a_bits = jnp.where(own_i, a_full, jnp.uint32(0))
+
+        # local τ partitions as per-member indexes (pre-sorted host-side)
+        uqs, uqo = uq_spo[:, 0], uq_ops[:, 0]
+        tgts_u = TripleIndex(
+            spo=TripleStore(
+                spo=uqs,
+                n=jnp.sum(uqs[:, :, 0] != PAD, axis=1).astype(jnp.int32),
+            ),
+            ops=TripleStore(
+                spo=uqo,
+                n=jnp.sum(uqo[:, :, 0] != PAD, axis=1).astype(jnp.int32),
+            ),
+        )
+        tgt_mem = tree_gather(tgts_u, tgt_map)
+        d_store = TripleStore(spo=d_mem_spo, n=jnp.take(d_ns, f_map, axis=0))
+        i_store = TripleStore(spo=i_spo, n=i_ns)
+        d_res = jax.vmap(
+            lambda m, t, b, p: eval_d(m, t, b, p)
+        )(d_store, tgt_mem, d_bits, pats)
+        a_res = jax.vmap(
+            lambda m, t, b, p: eval_a(m, t, b, p)
+        )(i_store, tgt_mem, a_bits, pats)
+        return jax.tree.map(lambda t: t[None], (d_res, a_res))
+
+    store_spec = TripleStore(spo=P(axis), n=P(axis))
+    side_spec = SideResult(
+        interesting=store_spec, potential=store_spec, pulls=store_spec,
+        overflow=P(axis),
+    )
+    rep = P()
+    sharded_passes = shard_map_compat(
+        shard_body,
+        mesh,
+        in_specs=(
+            rep, rep, rep, rep,
+            P(None, axis), P(None, axis),
+            rep, rep, rep, rep, rep, rep,
+        ),
+        out_specs=(side_spec, side_spec),
+    )
+
+    def merge_side(res: SideResult, out_cap: int, pull_cap: int) -> SideResult:
+        """Union the per-shard results back into canonical per-member form."""
+
+        def merge_store(st: TripleStore, cap: int):
+            rows = jnp.swapaxes(st.spo, 0, 1).reshape(st.spo.shape[1], -1, 3)
+            return jax.vmap(lambda r: from_array(r, cap))(rows)
+
+        inter, ovf_i = merge_store(res.interesting, out_cap)
+        pot, ovf_q = merge_store(res.potential, out_cap)
+        pulls, ovf_p = merge_store(res.pulls, pull_cap)
+        overflow = jnp.any(res.overflow, axis=0) | ovf_i | ovf_q | ovf_p
+        return SideResult(
+            interesting=inter, potential=pot, pulls=pulls, overflow=overflow
+        )
+
+    @jax.jit
+    def step(
+        d_sets: Tuple[TripleStore, ...],
+        a_sets: Tuple[TripleStore, ...],
+        bank_dev: jax.Array,
+        uniq_taus: Tuple[TripleStore, ...],
+        uniq_tau_spo: jax.Array,
+        uniq_tau_ops: jax.Array,
+        f_map: jax.Array,
+        tgt_map: jax.Array,
+        rhos: Tuple[TripleStore, ...],
+        pats: jax.Array,
+        lanes: jax.Array,
+        active: jax.Array,
+    ):
+        nc = lanes.shape[0]
+        rhos_s = tree_stack(list(rhos))
+        uniq_s = tree_stack(list(uniq_taus))
+        d_stack = tree_stack(list(d_sets))
+        a_stack = tree_stack(list(a_sets))
+        a_mem = tree_gather(a_stack, f_map)
+        i_sets, ovf_i = jax.vmap(lambda a, r: union(a, r, caps.n_i))(
+            a_mem, rhos_s
+        )
+        d_res_sh, a_res_sh = sharded_passes(
+            d_stack.spo, d_stack.n, i_sets.spo, i_sets.n,
+            uniq_tau_spo, uniq_tau_ops,
+            bank_dev, f_map, tgt_map, pats, lanes, active,
+        )
+        d_res = merge_side(d_res_sh, caps.n_removed, caps.pulls)
+        a_res = merge_side(a_res_sh, caps.n_i, caps.pulls)
+        taus = tree_gather(uniq_s, tgt_map)
+        tau1, rho1, out = jax.vmap(
+            lambda dr, ar, t, r, o: combine_side_results(dr, ar, t, r, caps, o)
+        )(d_res, a_res, taus, rhos_s, ovf_i)
+        return (
+            tuple(tree_index(tau1, i) for i in range(nc)),
+            tuple(tree_index(rho1, i) for i in range(nc)),
+            tuple(tree_index(out, i) for i in range(nc)),
+        )
+
+    return step
+
+
 def _assemble_cohort_statics(
     pat_rows: Sequence[np.ndarray],
     lane_rows: Sequence[Sequence[int]],
@@ -358,14 +623,20 @@ def _assemble_cohort_statics(
     )
 
 
-_EMPTY_STORES: Dict[int, TripleStore] = {}
+_EMPTY_STORES: Dict[tuple, TripleStore] = {}
 
 
-def _empty_cached(capacity: int) -> TripleStore:
-    """Shared immutable empty store per capacity (cohort padding lanes)."""
-    store = _EMPTY_STORES.get(capacity)
+def _empty_cached(capacity: int, device=None) -> TripleStore:
+    """Shared immutable empty store per (capacity, device) — cohort padding
+    lanes; the placed broker keeps one copy committed per mesh device so
+    padding slots never re-transfer at fire time."""
+    key = (capacity, device)
+    store = _EMPTY_STORES.get(key)
     if store is None:
-        store = _EMPTY_STORES.setdefault(capacity, empty(capacity))
+        store = empty(capacity)
+        if device is not None:
+            store = jax.device_put(store, device)
+        store = _EMPTY_STORES.setdefault(key, store)
     return store
 
 
@@ -501,6 +772,9 @@ class BrokerSubscription:
         self.id_capacity = dictionary.id_capacity * caps.id_headroom
         self.tau = empty(caps.tau)
         self.rho = empty(caps.rho)
+        # bumped on every τ assignment; keys the broker's τ-shard partition
+        # cache, so only touched replicas ever re-partition
+        self.tau_version = 0
         self.lanes: Tuple[int, ...] = ()  # bank lane map (broker-managed)
         self.since = 1  # first unconsumed changeset id (broker-managed)
         self.last_push_t = time.perf_counter()
@@ -520,6 +794,7 @@ class BrokerSubscription:
         self.id_capacity = self.dictionary.id_capacity * self.caps.id_headroom
         self.tau, _ = union(empty(self.caps.tau), self.tau, self.caps.tau)
         self.rho, _ = union(empty(self.caps.rho), self.rho, self.caps.rho)
+        self.tau_version += 1
 
     def init_target(self, triples: np.ndarray) -> bool:
         """Load the initial RDFSlice-style subset into τ. True if caps grew."""
@@ -530,6 +805,7 @@ class BrokerSubscription:
             )
             if not bool(overflow):
                 self.tau = store
+                self.tau_version += 1
                 return grew
             self.recompile(self.caps.doubled())
             grew = True
@@ -552,6 +828,8 @@ class BrokerStats:
     n_evaluated: int = 0  # subscribers whose policy fired
     n_deferred: int = 0  # subscribers whose batch kept accumulating
     n_cohort_passes: int = 0  # cohort executables invoked
+    batch_grows: int = 0  # cumulative ChangesetBatch pow2 doublings
+    batch_shrinks: int = 0  # cumulative ChangesetBatch decay re-homes
 
 
 @dataclasses.dataclass
@@ -600,6 +878,26 @@ class Broker:
     batches on device end-to-end (:meth:`ChangesetBatch.device_stores` +
     :func:`repro.core.triples.rehome`) and stacks same-shape cohorts fired
     from different frontiers into one batched executable call.
+
+    ``mesh`` (a 1-D jax device mesh) turns on multi-device evaluation:
+
+    * by default every cohort is *placed* on one mesh device per the
+      :class:`~repro.core.distributed.CohortPlacement` policy in
+      ``placement`` (round-robin / load-balanced / pinned); the frontier
+      pass dispatches cohort calls grouped by device, so same-fire cohorts
+      run concurrently across the mesh and each cohort's τ/ρ state stays
+      resident on its device between fires;
+    * ``shard_cohorts=True`` instead runs every cohort pass *inside*
+      shard_map over the whole mesh (:func:`make_sharded_cohort_step`):
+      τ replicas hash-partition across the shards (partitions cached per
+      (subscription, τ-version, capacity) so churn never re-partitions
+      untouched replicas), bank matching block-splits across shards with
+      block-gathered reassembly, and candidate probes route via all_to_all.
+
+    Both modes are asserted bit-identical to the single-device broker
+    (tests/test_broker_sharded.py, benchmarks/broker_shard.py). Per-frontier
+    composed batches remain the delivery windows — the natural cross-host
+    boundary for a future multi-process deployment.
     """
 
     def __init__(
@@ -608,6 +906,10 @@ class Broker:
         matcher: Optional[Callable] = None,
         cache_executables: bool = True,
         deferred_device_resident: bool = True,
+        mesh=None,
+        placement: CohortPlacement | None = None,
+        shard_cohorts: bool = False,
+        decay_patience: int = 2,
     ):
         self.dictionary = dictionary if dictionary is not None else Dictionary()
         self.matcher = matcher
@@ -616,6 +918,30 @@ class Broker:
         self.bank = IncrementalPatternBank()
         self.cache_executables = cache_executables
         self.deferred_device_resident = deferred_device_resident
+        self.mesh = mesh
+        self.shard_cohorts = shard_cohorts
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError("Broker expects a 1-D device mesh")
+            self._shard_axis = mesh.axis_names[0]
+            self._n_shards = int(mesh.shape[self._shard_axis])
+            self._devices = list(np.asarray(mesh.devices).reshape(-1))
+        else:
+            self._shard_axis = None
+            self._n_shards = 1
+            self._devices = []
+        self.placement = (
+            placement if placement is not None else CohortPlacement()
+        )
+        self.decay_patience = decay_patience
+        self.device_passes: Dict[int, int] = {}  # device idx -> cohort passes
+        self.batch_grows = 0  # ChangesetBatch pow2 doublings (cumulative)
+        self.batch_shrinks = 0  # ChangesetBatch decay re-homes (cumulative)
+        self._grow_seen: Dict[int, int] = {}  # frontier id -> folded grows
+        # τ-shard partitions per (sub serial, τ version, cap, n_shards)
+        self._tau_parts_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._empty_parts_cache: Dict[tuple, jax.Array] = {}
+        self._bank_dev_for: Dict[tuple, jax.Array] = {}  # (version, dev idx)
         # LRU-bounded: superseded keys (outgrown caps, old padded sizes)
         # eventually fall out instead of holding XLA executables forever;
         # evicting a hot key only costs a recompile, never correctness
@@ -661,6 +987,11 @@ class Broker:
         the paper's many-readers-of-one-target-dataset case. Falls back to
         an independent subscription when no compatible root exists.
         """
+        if self.shard_cohorts and caps.dedup_candidates:
+            raise ValueError(
+                "shard_cohorts=True requires caps.dedup_candidates == 0 "
+                "(see make_sharded_cohort_step)"
+            )
         sub = BrokerSubscription(expr, self.dictionary, caps, policy=policy)
         sub.since = self._counter + 1
         root = self._find_share_root(sub) if share_target else None
@@ -705,17 +1036,61 @@ class Broker:
             if remap is not None:
                 for s in self.subs:
                     s.lanes = tuple(remap[l] for l in s.lanes)
-            self._gc_batches()
+            self._sweep_batches(drained=False)
         if not self.cache_executables:
             self._exec_cache.clear()  # PR 1 full-rebuild baseline behavior
 
     # -- executable cache ---------------------------------------------------
 
-    def _ensure_bank_dev(self) -> jax.Array:
+    def _ensure_bank_dev(self, dev: int | None = None) -> jax.Array:
         if self._bank_dev is None or self._bank_version != self.bank.version:
             self._bank_dev = jnp.asarray(self.bank.patterns_padded())
             self._bank_version = self.bank.version
-        return self._bank_dev
+            self._bank_dev_for.clear()
+        if dev is None:
+            return self._bank_dev
+        key = (self._bank_version, dev)
+        placed = self._bank_dev_for.get(key)
+        if placed is None:
+            placed = self._bank_dev_for.setdefault(
+                key, jax.device_put(self._bank_dev, self._devices[dev])
+            )
+        return placed
+
+    def _tau_partitions(self, sub: BrokerSubscription, cap: int) -> tuple:
+        """Hash-partitioned (SPO, OPS) shards of one subscription's τ.
+
+        Cached per (subscription serial, τ version, capacity, mesh size):
+        membership churn, bank churn, and fires of *other* subscriptions
+        leave the key untouched, so only replicas whose τ actually changed
+        (or whose capacity grew) ever re-partition. The host-side partition
+        pass (``prepare_target_shards``) is the device-residency boundary of
+        the sharded path — one τ pull per version, amortized over every fire
+        until the next update.
+        """
+        key = (sub.serial, sub.tau_version, cap, self._n_shards)
+        hit = self._tau_parts_cache.get(key)
+        if hit is not None:
+            self._tau_parts_cache.move_to_end(key)
+            return hit
+        spo, ops, _ = prepare_target_shards(
+            to_numpy(sub.tau), self._n_shards, cap
+        )  # shard cap == replica cap, so a partition can never overflow
+        parts = (jnp.asarray(spo), jnp.asarray(ops))
+        self._tau_parts_cache[key] = parts
+        while len(self._tau_parts_cache) > self.exec_cache_max:
+            self._tau_parts_cache.popitem(last=False)
+        return parts
+
+    def _empty_parts(self, cap: int) -> jax.Array:
+        """All-PAD τ partition block for padded unique-target slots."""
+        key = (cap, self._n_shards)
+        block = self._empty_parts_cache.get(key)
+        if block is None:
+            block = self._empty_parts_cache.setdefault(
+                key, jnp.full((self._n_shards, cap, 3), PAD, jnp.int32)
+            )
+        return block
 
     def _build_exec(self, key: tuple, builder: Callable, args: tuple):
         """Fetch-or-compile one executable; compile time goes to rejit_s.
@@ -782,7 +1157,7 @@ class Broker:
             ):
                 fired.append(k)
         results, n_passes = self._fire(fired)
-        self._gc_batches()
+        self._sweep_batches(drained=bool(fired))
         self._record_stats(
             cid, removed, added, results, fired, n_passes, t0
         )
@@ -809,7 +1184,7 @@ class Broker:
         self._rejit_acc = 0.0
         fired = [k for k in targets if self.subs[k].since in self._batches]
         results, n_passes = self._fire(fired)
-        self._gc_batches()
+        self._sweep_batches(drained=bool(fired))
         if fired:
             z = np.zeros((0, 3), np.int32)
             self._record_stats(
@@ -910,11 +1285,35 @@ class Broker:
             a_store=lambda cap: from_array(jnp.asarray(a_np, jnp.int32), cap)[0],
         )
 
-    def _gc_batches(self) -> None:
+    def _sweep_batches(self, drained: bool) -> None:
+        """Batch lifecycle bookkeeping at one orchestration point.
+
+        Folds every live batch's capacity-doubling count into the broker
+        totals (before GC, so growth on a just-consumed frontier is not
+        lost), drops batches no subscriber references, and — only when this
+        call actually drained something, keeping the per-changeset ingest
+        path free of device-scalar syncs — runs the capacity-decay check on
+        the surviving deferred frontiers
+        (:meth:`~repro.core.propagation.ChangesetBatch.maybe_decay`).
+        """
+        for since, b in self._batches.items():
+            seen = self._grow_seen.get(since, 0)
+            if b.grow_count > seen:
+                self.batch_grows += b.grow_count - seen
+                self._grow_seen[since] = b.grow_count
         live = {s.since for s in self.subs}
         self._batches = {
             since: b for since, b in self._batches.items() if since in live
         }
+        self._grow_seen = {
+            since: g
+            for since, g in self._grow_seen.items()
+            if since in self._batches
+        }
+        if drained:
+            for b in self._batches.values():
+                if b.maybe_decay(self.decay_patience):
+                    self.batch_shrinks += 1
 
     # -- evaluator ----------------------------------------------------------
 
@@ -926,6 +1325,7 @@ class Broker:
         upos: Dict[int, int],
         ncp: int,
         nt: int,
+        device=None,
     ):
         """Membership-static device inputs for one cohort invocation.
 
@@ -960,6 +1360,9 @@ class Broker:
             ncp,
             nt,
         )
+        if device is not None:
+            # committed to the cohort's placed device once, re-used per fire
+            arrays = jax.device_put(arrays, device)
         self._static_arrays_cache[key] = arrays
         while len(self._static_arrays_cache) > self.exec_cache_max:
             self._static_arrays_cache.popitem(last=False)
@@ -976,11 +1379,20 @@ class Broker:
         fires from (members gather their frontier's slices via ``f_map``).
         The round-trip baseline calls this with single-frontier lists, so
         both paths share executables, statics, and commit discipline.
+
+        With a mesh the pass is placement-aware: cohort calls are grouped
+        by their :class:`~repro.core.distributed.CohortPlacement` device —
+        dispatched in device order with fully committed inputs, so the
+        asynchronously-running executables overlap across the mesh — or,
+        under ``shard_cohorts=True``, every cohort call runs inside
+        shard_map over the whole mesh with hash-partitioned τ shards.
         """
         subs = self.subs
         # matcher identity is baked into compiled steps, so it must be part
         # of every executable key (caches may be shared across brokers)
         mkey = id(self.matcher) if self.matcher is not None else None
+        sharded = self.mesh is not None and self.shard_cohorts
+        placed = self.mesh is not None and not self.shard_cohorts
         n_passes = 0  # counts abandoned overflow-retry attempts too
         while True:
             for fr in fronts:
@@ -1004,27 +1416,31 @@ class Broker:
 
             # fused pass 1: deleted side of EVERY frontier in one stacked
             # bank pass (sliced per cohort so per-subscriber growth stays
-            # local); padding frontier slots carry empty stores
+            # local); padding frontier slots carry empty stores. The
+            # sharded path computes its words in-graph instead (block-split
+            # across shards, block-gather-stitched), so it skips this pass.
             d_stores = [fr.d_store(d_cap) for fr in fronts]
-            d_spos = tuple(st.spo for st in d_stores) + (
-                _empty_cached(d_cap).spo,
-            ) * (nfp - nf)
-            wkey = ("words", d_cap, n_words_p, nfp, mkey)
-            miss = wkey not in self._exec_cache
-            words_fn = self._build_exec(
-                wkey,
-                lambda: jax.jit(
-                    lambda spos, b: jax.vmap(
-                        lambda spo: kops.pattern_bitmask_words(
-                            spo, b, matcher=self.matcher
-                        )
-                    )(jnp.stack(spos))
-                ),
-                (d_spos, bank_dev),
-            )
-            if miss:
-                self.words_compiles += 1
-            d_words_all = words_fn(d_spos, bank_dev)  # (nfp, d_cap, W)
+            d_words_all = None
+            if not sharded:
+                d_spos = tuple(st.spo for st in d_stores) + (
+                    _empty_cached(d_cap).spo,
+                ) * (nfp - nf)
+                wkey = ("words", d_cap, n_words_p, nfp, mkey)
+                miss = wkey not in self._exec_cache
+                words_fn = self._build_exec(
+                    wkey,
+                    lambda: jax.jit(
+                        lambda spos, b: jax.vmap(
+                            lambda spo: kops.pattern_bitmask_words(
+                                spo, b, matcher=self.matcher
+                            )
+                        )(jnp.stack(spos))
+                    ),
+                    (d_spos, bank_dev),
+                )
+                if miss:
+                    self.words_compiles += 1
+                d_words_all = words_fn(d_spos, bank_dev)  # (nfp, d_cap, W)
 
             # per-frontier added sides, cached per cohort capacity
             a_cache: Dict[Tuple[int, int], TripleStore] = {}
@@ -1041,10 +1457,27 @@ class Broker:
                     key = (_plan_shape_key(s.plan), s.caps, s.id_capacity)
                     cohorts.setdefault(key, []).append((fi, k))
 
+            # placement: sticky cohort -> device assignment, calls grouped
+            # (and therefore dispatched) by device so the mesh runs cohorts
+            # concurrently; the sharded path spans every device per call
+            cohort_items = list(cohorts.items())
+            cohort_dev: Dict[tuple, Optional[int]] = {}
+            for key, fk in cohort_items:
+                if placed:
+                    cohort_dev[key] = self.placement.assign(
+                        key, next_pow2(len(fk)), len(self._devices)
+                    )
+                else:
+                    cohort_dev[key] = None
+            if placed:
+                cohort_items.sort(key=lambda kv: cohort_dev[kv[0]])
+
             staged: Dict[int, Tuple[TripleStore, TripleStore]] = {}
             outs: Dict[int, EvalOutputs] = {}
             overflowed: List[int] = []
-            for (skey, caps, id_cap), fk in cohorts.items():
+            for (skey, caps, id_cap), fk in cohort_items:
+                dev = cohort_dev[(skey, caps, id_cap)]
+                device = self._devices[dev] if dev is not None else None
                 members = [k for _, k in fk]
                 rep = subs[members[0]]
                 nt = rep.plan.n_total
@@ -1076,58 +1509,110 @@ class Broker:
                         n=d_stores[fi].n,
                     )
                     for fi in fs_used
-                ) + (_empty_cached(caps.n_removed),) * (nfcp - nfc)
-                d_words = tuple(
-                    d_words_all[fi, : caps.n_removed] for fi in fs_used
-                )
-                if nfcp > nfc:
-                    zero_w = jnp.zeros(
-                        (caps.n_removed, n_words_p), jnp.uint32
-                    )
-                    d_words = d_words + (zero_w,) * (nfcp - nfc)
+                ) + (_empty_cached(caps.n_removed, device),) * (nfcp - nfc)
                 a_sets = tuple(a_of(fi, caps.n_added) for fi in fs_used) + (
-                    _empty_cached(caps.n_added),
+                    _empty_cached(caps.n_added, device),
                 ) * (nfcp - nfc)
                 uniq_taus = tuple(subs[g[0]].tau for g in ugroups) + (
-                    _empty_cached(caps.tau),
+                    _empty_cached(caps.tau, device),
                 ) * (nup - nu)
                 rhos_c = tuple(subs[k].rho for k in members) + (
-                    _empty_cached(caps.rho),
+                    _empty_cached(caps.rho, device),
                 ) * (ncp - nm)
-                ckey = (
-                    "cohort", skey, caps, id_cap, ncp, nup, nfcp,
-                    n_words_p, mkey,
-                )
-                (
-                    f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
-                ) = self._static_arrays(ckey, fk, f_list, upos, ncp, nt)
-                args = (
-                    d_sets,
-                    d_words,
-                    a_sets,
-                    bank_dev,
-                    uniq_taus,
-                    f_map_d,
-                    tgt_map_d,
-                    rhos_c,
-                    pats_d,
-                    lanes_d,
-                    active_d,
-                )
-                miss = ckey not in self._exec_cache
-                fn = self._build_exec(
-                    ckey,
-                    lambda: make_cohort_step(
+                if sharded:
+                    ckey = (
+                        "cohort-sh", skey, caps, id_cap, ncp, nup, nfcp,
+                        n_words_p, self._n_shards, mkey,
+                    )
+                    (
+                        f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
+                    ) = self._static_arrays(ckey, fk, f_list, upos, ncp, nt)
+                    parts = [
+                        self._tau_partitions(subs[g[0]], caps.tau)
+                        for g in ugroups
+                    ]
+                    pad_part = [self._empty_parts(caps.tau)] * (nup - nu)
+                    uniq_spo_sh = jnp.stack(
+                        [p[0] for p in parts] + pad_part
+                    )
+                    uniq_ops_sh = jnp.stack(
+                        [p[1] for p in parts] + pad_part
+                    )
+                    args = (
+                        d_sets,
+                        a_sets,
+                        bank_dev,
+                        uniq_taus,
+                        uniq_spo_sh,
+                        uniq_ops_sh,
+                        f_map_d,
+                        tgt_map_d,
+                        rhos_c,
+                        pats_d,
+                        lanes_d,
+                        active_d,
+                    )
+                    builder = lambda: make_sharded_cohort_step(  # noqa: E731
+                        rep.plan, caps, id_cap, self.mesh,
+                        axis=self._shard_axis, n_shards=self._n_shards,
+                        matcher=self.matcher,
+                    )
+                else:
+                    d_words = tuple(
+                        d_words_all[fi, : caps.n_removed] for fi in fs_used
+                    )
+                    if nfcp > nfc:
+                        zero_w = jnp.zeros(
+                            (caps.n_removed, n_words_p), jnp.uint32
+                        )
+                        d_words = d_words + (zero_w,) * (nfcp - nfc)
+                    ckey = (
+                        "cohort", skey, caps, id_cap, ncp, nup, nfcp,
+                        n_words_p, mkey, dev,
+                    )
+                    (
+                        f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
+                    ) = self._static_arrays(
+                        ckey, fk, f_list, upos, ncp, nt, device=device
+                    )
+                    args = (
+                        d_sets,
+                        d_words,
+                        a_sets,
+                        self._ensure_bank_dev(dev) if placed else bank_dev,
+                        uniq_taus,
+                        f_map_d,
+                        tgt_map_d,
+                        rhos_c,
+                        pats_d,
+                        lanes_d,
+                        active_d,
+                    )
+                    if placed:
+                        # commit every operand to the cohort's device:
+                        # resident state (τ/ρ, statics, bank, padding) is
+                        # already there, so only the frontier slices move
+                        args = jax.device_put(args, device)
+                    builder = lambda: make_cohort_step(  # noqa: E731
                         rep.plan, caps, id_cap, matcher=self.matcher
-                    ),
-                    args,
-                )
+                    )
+                miss = ckey not in self._exec_cache
+                fn = self._build_exec(ckey, builder, args)
                 if miss:
                     self.cohort_compiles[ckey] = (
                         self.cohort_compiles.get(ckey, 0) + 1
                     )
                 tau1_c, rho1_c, out_c = fn(*args)
                 n_passes += 1
+                if sharded:
+                    for i in range(len(self._devices)):
+                        self.device_passes[i] = (
+                            self.device_passes.get(i, 0) + 1
+                        )
+                else:
+                    self.device_passes[dev or 0] = (
+                        self.device_passes.get(dev or 0, 0) + 1
+                    )
                 for ug, g in enumerate(ugroups):
                     pos0 = members.index(g[0])
                     out = out_c[pos0]
@@ -1144,8 +1629,27 @@ class Broker:
                 for k in sorted(set(overflowed)):
                     subs[k].recompile(subs[k].caps.doubled())
                 continue
+            # only the sharded path consults the τ-partition cache, and only
+            # an actually-changed replica should invalidate it — a fire
+            # whose changesets missed this interest commits a bit-identical
+            # τ, and re-partitioning it would waste the exact host round
+            # trip the cache exists to amortize. Comparisons memoize on the
+            # (old, new) array pair, so a shared-τ group syncs once.
+            unchanged_cache: Dict[Tuple[int, int], bool] = {}
             for k, (tau1, rho1) in staged.items():
-                subs[k].tau, subs[k].rho = tau1, rho1
+                s = subs[k]
+                unchanged = False
+                if sharded:
+                    pair = (id(s.tau.spo), id(tau1.spo))
+                    unchanged = unchanged_cache.get(pair)
+                    if unchanged is None:
+                        unchanged = s.tau.spo.shape == tau1.spo.shape and bool(
+                            jnp.all(s.tau.spo == tau1.spo)
+                        )
+                        unchanged_cache[pair] = unchanged
+                if not unchanged:
+                    s.tau_version += 1
+                s.tau, s.rho = tau1, rho1
             if staged:
                 # block on every cohort's output so elapsed_s covers all work
                 jax.block_until_ready(
@@ -1181,5 +1685,7 @@ class Broker:
                 n_evaluated=len(fired),
                 n_deferred=len(self.subs) - len(fired),
                 n_cohort_passes=n_passes,
+                batch_grows=self.batch_grows,
+                batch_shrinks=self.batch_shrinks,
             )
         )

@@ -199,17 +199,32 @@ def make_side_evaluator(
     ``probe_impl``/``table_reduce`` are the distribution hooks
     (core/distributed.py): the sharded evaluator swaps in an all_to_all
     routed probe and an OR-all-reduce over the signature tables; the local
-    evaluator uses :func:`probe` and identity.
+    evaluator uses :func:`probe` / :func:`probe_dyn` and identity.
 
     ``dynamic_patterns=True`` builds the evaluator for the broker's batched
     cohort path: the returned callable takes the pattern *values* as a
-    traced ``patterns`` argument (probes route through :func:`probe_dyn`)
-    so a whole cohort of same-shape interests can be vmapped; ``plan`` then
-    only supplies the static structure (kinds, slots, const masks).
+    traced ``patterns`` argument so a whole cohort of same-shape interests
+    can be vmapped; ``plan`` then only supplies the static structure (kinds,
+    slots, const masks).  The hooks compose with it — the broker's sharded
+    cohort step routes cohort probes across the mesh — but the probe hook
+    contract changes with the mode, because the pattern constants are traced
+    per member:
+
+      static  (default)          ``probe_impl(index, pattern, bound_slot,
+                                 bound_vals, fanout)`` — :func:`probe`-shaped,
+                                 e.g. ``distributed.make_routed_probe``;
+      dynamic (``dynamic_patterns=True``)
+                                 ``probe_impl(index, pattern_host,
+                                 pattern_dev, bound_slot, bound_vals,
+                                 fanout)`` — :func:`probe_dyn`-shaped, e.g.
+                                 ``distributed.make_routed_probe_batched``.
+
+    ``table_reduce`` sees boolean signature tables in both modes and must
+    batch under ``jax.vmap`` when the cohort path is in play
+    (``distributed.make_or_reduce`` does).
     """
-    if dynamic_patterns and probe_impl is not None:
-        raise ValueError("dynamic_patterns is incompatible with probe_impl")
     matcher = matcher or kops.pattern_bitmask
+    probe_dyn_impl = (probe_impl or probe_dyn) if dynamic_patterns else None
     probe_impl = probe_impl or probe
     table_reduce = table_reduce or (lambda t: t)
     dedup_cap = dedup_candidates
@@ -280,7 +295,7 @@ def make_side_evaluator(
 
         def run_probe(j: int, bound_slot: int, bound_vals: jax.Array):
             if dynamic_patterns:
-                return probe_dyn(
+                return probe_dyn_impl(
                     tgt, plan.patterns[j], pats[j], bound_slot, bound_vals, K
                 )
             return probe_impl(tgt, plan.patterns[j], bound_slot, bound_vals, K)

@@ -39,6 +39,7 @@ from .triples import (
     difference,
     empty,
     from_array,
+    rehome,
     to_numpy,
     union,
 )
@@ -166,7 +167,16 @@ class ChangesetBatch:
     One batch exists per distinct consumption frontier (`first_id`): every
     subscriber whose push policy has deferred the same suffix of the stream
     shares one batch, so accumulation cost scales with the number of distinct
-    cadences, not subscribers. Capacities double transparently on overflow.
+    cadences, not subscribers. Capacities double transparently on overflow
+    and *decay* back down at drain points: a long-lived slow-cadence
+    frontier that once absorbed a burst would otherwise hold its peak pow2
+    bucket forever, so the broker calls :meth:`maybe_decay` after each fire
+    and the batch re-homes to the smaller bucket once its live rows have
+    padded below half the allocation for ``patience`` consecutive checks
+    (:func:`repro.core.triples.rehome` makes the shrink a device-side
+    slice — no re-sort, no transfer). ``grow_count`` and
+    :meth:`maybe_decay`'s return value feed the broker's capacity
+    accounting (``BrokerStats.batch_grows`` / ``batch_shrinks``).
 
     **Device-resident contract.** Once composed (``n_changesets > 1``, or
     after :meth:`device_stores`), the batch owns two lex-sorted, deduped
@@ -196,6 +206,9 @@ class ChangesetBatch:
     # changeset
     d_rows: int | None = None
     a_rows: int | None = None
+    # capacity lifecycle accounting: pow2 doublings since creation
+    grow_count: int = 0
+    _decay_streak: int = 0
 
     @staticmethod
     def fresh(
@@ -227,6 +240,7 @@ class ChangesetBatch:
                 self.d_rows = self.a_rows = None
                 return
             self.capacity *= 2
+            self.grow_count += 1
 
     def extend(
         self, removed: np.ndarray, added: np.ndarray, changeset_id: int
@@ -237,6 +251,7 @@ class ChangesetBatch:
         need = max(int(removed.shape[0]), int(added.shape[0]))
         while self.capacity < need:
             self.capacity *= 2
+            self.grow_count += 1
         d2, _ = from_array(jnp.asarray(removed, jnp.int32), self.capacity)
         a2, _ = from_array(jnp.asarray(added, jnp.int32), self.capacity)
         while True:
@@ -246,6 +261,7 @@ class ChangesetBatch:
             if not bool(overflow):
                 break
             self.capacity *= 2
+            self.grow_count += 1
         self.removed, self.added = d, a
         self.d_rows = self.a_rows = None  # synced lazily at fire time
         self.n_changesets += 1
@@ -265,6 +281,36 @@ class ChangesetBatch:
             self.d_rows = int(self.removed.n)
             self.a_rows = int(self.added.n)
         return self.d_rows, self.a_rows
+
+    def maybe_decay(self, patience: int = 2, floor: int = 64) -> bool:
+        """Re-home to a smaller pow2 bucket after sustained under-fill.
+
+        Called by the broker at drain points (fires / flushes — never on the
+        per-changeset ingest path, so no extra device-scalar syncs there).
+        When the composed live rows would pad to at most *half* the current
+        allocation for ``patience`` consecutive checks, both stores re-home
+        to that smaller power-of-two bucket via
+        :func:`repro.core.triples.rehome` — a pure pad/slice, so the shrink
+        costs no re-sort and no host transfer. A single burst therefore
+        never thrashes the capacity down (the streak resets on any
+        well-filled check), while a frontier that has genuinely quieted
+        releases its peak allocation. Returns True when a shrink happened.
+        """
+        if self.removed is None:
+            return False
+        d_rows, a_rows = self.row_bounds()
+        want = max(floor, next_pow2(max(d_rows, a_rows, 1)))
+        if want > self.capacity // 2:
+            self._decay_streak = 0
+            return False
+        self._decay_streak += 1
+        if self._decay_streak < patience:
+            return False
+        self.removed = rehome(self.removed, want)
+        self.added = rehome(self.added, want)
+        self.capacity = want
+        self._decay_streak = 0
+        return True
 
     def device_stores(self) -> Tuple[TripleStore, TripleStore]:
         """The composed batch as device stores (D, A) — no host transfer

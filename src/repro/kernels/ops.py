@@ -162,6 +162,7 @@ def lane_bits_batched(
     words: jax.Array,
     lanes_arr: jax.Array,
     active: jax.Array | None = None,
+    row_mask: jax.Array | None = None,
 ) -> jax.Array:
     """Batched lane routing for a subscriber cohort.
 
@@ -175,6 +176,12 @@ def lane_bits_batched(
     power-of-two sizes so membership churn reuses cached executables; the
     padding lanes are dummy members whose bits are forced to zero here, so
     downstream evaluation sees no candidates and produces empty outputs.
+
+    ``row_mask`` (optional): bool[N, R] per-shard row-ownership mask — the
+    sharded broker's variant.  Each mesh device evaluates the same member
+    rows but owns only the subset whose hash lands on it; zeroing the other
+    rows' bits here partitions candidates, signature scatters, and outputs
+    across shards without reshaping any executable input.
     """
     n, r, _ = words.shape
     nt = lanes_arr.shape[1]
@@ -188,6 +195,8 @@ def lane_bits_batched(
     out = jnp.sum(bits, axis=2, dtype=jnp.uint32)
     if active is not None:
         out = jnp.where(active[:, None], out, jnp.uint32(0))
+    if row_mask is not None:
+        out = jnp.where(row_mask, out, jnp.uint32(0))
     return out
 
 

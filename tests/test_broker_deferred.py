@@ -210,3 +210,110 @@ def test_device_resident_property_random_streams():
         assert_states_identical(dev, rtt, "final")
 
     prop()
+
+
+def _burst_rows(d, n_raw, n_distinct, seed=0):
+    """n_raw triples drawn from an n_distinct-triple pool (duplicate-heavy:
+    raw rows force capacity growth, composed rows stay small)."""
+    rng = np.random.default_rng(seed)
+    pool = [
+        (f"e:{i % 50}", "p:goals", str(1000 + i)) for i in range(n_distinct)
+    ]
+    picks = [pool[rng.integers(0, n_distinct)] for _ in range(n_raw)]
+    return d.encode_triples(picks)
+
+
+def test_batch_capacity_decay():
+    """A deferred frontier that grew through a duplicate-heavy burst decays
+    back to a smaller pow2 bucket after `decay_patience` consecutive drains,
+    and BrokerStats exposes the grow/shrink counts."""
+    d, tau0 = _universe()
+    broker = Broker(d, decay_patience=2)
+    expr = _exprs()[0]
+    # X is drained explicitly every round; Y defers forever, so its batch
+    # survives every drain and is the decay candidate
+    x = broker.subscribe(
+        expr, CAPS, initial_target=tau0, policy=PushPolicy.max_staleness(1e9)
+    )
+    y = broker.subscribe(
+        _exprs()[1], CAPS, initial_target=tau0,
+        policy=PushPolicy.max_staleness(1e9),
+    )
+    z = np.zeros((0, 3), np.int32)
+
+    # small first changeset: the shared batch starts at the 64-row floor
+    broker.process_changeset(z, _burst_rows(d, 8, 8, seed=1))
+    # duplicate-heavy burst: 200 raw rows force the pow2 bucket up, but the
+    # composed distinct rows stay far below half the new allocation
+    broker.process_changeset(z, _burst_rows(d, 200, 24, seed=2))
+    batch = next(iter(broker._batches.values()))
+    assert batch.capacity >= 256
+    assert broker.batch_grows >= 1
+    cap_peak = batch.capacity
+
+    # each explicit drain of X is one decay check on Y's surviving batch;
+    # patience=2 means the first check only arms the streak
+    broker.process_changeset(z, _burst_rows(d, 4, 4, seed=3))
+    broker.flush(subs=[x])
+    assert batch.capacity == cap_peak and broker.batch_shrinks == 0
+    broker.process_changeset(z, _burst_rows(d, 4, 4, seed=4))
+    broker.flush(subs=[x])
+    assert batch.capacity < cap_peak, "second consecutive drain shrinks"
+    assert broker.batch_shrinks == 1
+    assert broker.stats[-1].batch_shrinks == 1
+    assert broker.stats[-1].batch_grows >= 1
+
+    # the decayed batch still drains correctly: Y's flush output equals
+    # eager evaluation of the same composed batch by the seed engine
+    from repro.core import IrapEngine
+    from repro.core.propagation import ChangesetBatch
+
+    d_ref = Dictionary()
+    tau_ref = d_ref.encode_triples(
+        [("e:1", A, "c:Athlete"), ("e:1", "p:goals", "10"), ("e:2", A, "c:Team")]
+    )
+    ref_stream = [
+        (z, _burst_rows(d_ref, 8, 8, seed=1)),
+        (z, _burst_rows(d_ref, 200, 24, seed=2)),
+        (z, _burst_rows(d_ref, 4, 4, seed=3)),
+        (z, _burst_rows(d_ref, 4, 4, seed=4)),
+    ]
+    comp = ChangesetBatch.fresh(*ref_stream[0], 1)
+    for i, cs in enumerate(ref_stream[1:], start=2):
+        comp.extend(*cs, i)
+    engine = IrapEngine(d_ref)
+    ref_sub = engine.register_interest(
+        _exprs()[1], CAPS, initial_target=tau_ref
+    )
+    want = ref_sub.apply(*comp.arrays())
+    got = broker.flush()[list(broker.subs).index(y)]
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        assert np.array_equal(
+            np.asarray(getattr(got, field).spo),
+            np.asarray(getattr(want, field).spo),
+        ), field
+
+
+def test_batch_decay_streak_resets_on_refill():
+    """A well-filled check between two under-filled ones resets the streak:
+    one burst never thrashes the capacity down."""
+    from repro.core.propagation import ChangesetBatch
+
+    d, _ = _universe()
+    batch = ChangesetBatch.fresh(
+        np.zeros((0, 3), np.int32), _burst_rows(d, 8, 8, seed=1), 1
+    )
+    batch.extend(np.zeros((0, 3), np.int32), _burst_rows(d, 200, 24, seed=2), 2)
+    cap = batch.capacity
+    assert cap >= 256
+    assert not batch.maybe_decay(patience=2)  # arms the streak
+    # refill above half: streak resets
+    batch.extend(
+        np.zeros((0, 3), np.int32),
+        d.encode_triples(
+            [(f"e:{i}", "p:fill", str(i)) for i in range(cap // 2 + 8)]
+        ),
+        3,
+    )
+    assert not batch.maybe_decay(patience=2)
+    assert batch._decay_streak == 0

@@ -24,6 +24,7 @@ SCRIPT = textwrap.dedent(
     from repro.core.distributed import (
         gather_result_sets,
         make_distributed_evaluator,
+        make_mesh_compat,
         partition_rows,
         prepare_target_shards,
     )
@@ -32,12 +33,7 @@ SCRIPT = textwrap.dedent(
     from repro.core.triples import PAD
 
     N_SHARDS = 4
-    try:
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((N_SHARDS,), ("data",),
-                             axis_types=(AxisType.Auto,))
-    except ImportError:
-        mesh = jax.make_mesh((N_SHARDS,), ("data",))
+    mesh = make_mesh_compat((N_SHARDS,), ("data",))
 
     d = Dictionary()
     for t in ([f"s{i}" for i in range(12)] + ["type", "p0", "p1", "goals",
@@ -86,18 +82,46 @@ SCRIPT = textwrap.dedent(
             want = (to_set(ref.interesting), to_set(ref.potential),
                     to_set(ref.pulls))
 
-            m_sh = partition_rows(m_rows, N_SHARDS, key_col=0, cap=M_CAP)
-            spo_sh, ops_sh = prepare_target_shards(tau_rows, N_SHARDS, T_CAP)
+            m_sh, m_ovf = partition_rows(m_rows, N_SHARDS, key_col=0, cap=M_CAP)
+            spo_sh, ops_sh, t_ovf = prepare_target_shards(
+                tau_rows, N_SHARDS, T_CAP)
+            assert not m_ovf.any() and not t_ovf.any()
             res = dist_ev(jax.numpy.asarray(m_sh), jax.numpy.asarray(spo_sh),
                           jax.numpy.asarray(ops_sh))
-            got = gather_result_sets(res)
+            got = gather_result_sets(res, partition_overflow=m_ovf | t_ovf)
             assert got[0] == want[0], (name, trial, "interesting", got[0], want[0])
             assert got[1] == want[1], (name, trial, "potential")
             assert got[2] == want[2], (name, trial, "pulls")
+            assert got[3] == bool(ref.overflow), (name, trial, "overflow")
             n_cases += 1
     print(f"DISTRIBUTED_EQUIVALENCE_OK cases={n_cases}")
     """
 )
+
+
+def test_partition_rows_overflow_flags():
+    """Per-shard overflow comes back as flags, never as an exception."""
+    np_mod = pytest.importorskip("numpy")
+    from repro.core.distributed import partition_rows, prepare_target_shards
+    from repro.core.triples import PAD
+
+    rows = np_mod.stack(
+        [
+            np_mod.arange(8, dtype=np_mod.int32) * 2,  # all even subjects
+            np_mod.ones(8, np_mod.int32),
+            np_mod.arange(8, dtype=np_mod.int32),
+        ],
+        axis=1,
+    )
+    shards, overflow = partition_rows(rows, n_shards=2, key_col=0, cap=4)
+    assert overflow.tolist() == [True, False]  # shard 0 got all 8 rows
+    assert (shards[0, :, 0] != PAD).sum() == 4  # excess rows dropped, not raised
+    assert (shards[1, :, 0] == PAD).all()
+
+    spo, ops, t_ovf = prepare_target_shards(rows, n_shards=2, cap=4)
+    assert t_ovf.tolist() == [True, False]
+    ok_sh, ok_ovf = partition_rows(rows, n_shards=2, key_col=0, cap=8)
+    assert not ok_ovf.any()
 
 
 @pytest.mark.slow
