@@ -1,27 +1,35 @@
-"""Deferred-path throughput: device-resident + frontier-stacked flush vs
-the PR 2 host-round-trip baseline.
+"""Deferred-path throughput: delta-encoded frontier chains vs the PR 3
+stacked pass vs the PR 2 host-round-trip baseline.
 
 The broker's scheduled path is where the paper's batching amortization
-lives (``PushPolicy`` — slow consumers absorb k changesets per push). PR 2
-paid a device→host→device round trip per fire and one sequential cohort
-pass per frontier; this benchmark drives identical deferred workloads —
-``n_subs`` subscribers over several shape cohorts, half flushed early so
-every full flush drains TWO distinct consumption frontiers — through
+lives (``PushPolicy`` — slow consumers absorb k changesets per push), and
+its frontiers overlap by construction: each later frontier's composed
+batch extends the earlier ones with the newest changesets. This benchmark
+drives an overlap-heavy deferred workload — removals drawn from a small
+entity pool so every frontier's composed D converges on the same distinct
+rows, subscriber groups staggered across ``n_groups`` consumption
+frontiers so the full flush drains them all at once — through three
+brokers:
 
-  * device    — ``Broker(deferred_device_resident=True)`` (default): fires
-                consume the composed batches' sorted device stores
-                (``ChangesetBatch.device_stores`` + ``triples.rehome``) and
-                same-shape cohorts stack across frontiers into one
-                executable call,
+  * delta     — ``Broker()`` (default): multi-frontier flushes build the
+                delta-encoded frontier chain
+                (``propagation.build_frontier_chain``) and match the
+                distinct-row union ONCE through the segmented bank pass
+                (``kernels.ops.pattern_bitmask_words_segmented``), each
+                frontier's words composed by membership masking,
+  * stacked   — ``Broker(delta_frontiers=False)``: the PR 3 device-resident
+                path, one stacked bank pass per fired frontier (shared
+                suffix rows re-matched once per frontier),
   * roundtrip — ``Broker(deferred_device_resident=False)``: the PR 2
-                behavior (``ChangesetBatch.arrays()`` + ``from_array``
-                re-upload per fire, sequential per-frontier passes).
+                behavior (host round trip + sequential per-frontier passes).
 
-Before timing, one warm round asserts the two paths' flush outputs
+Before timing, one warm round asserts all three paths' flush outputs
 bit-identical to each other AND to eager evaluation of the same composed
-batches by the seed per-interest engine. Reported: flush seconds per round
-(compile time excluded via ``BrokerStats.rejit_s``), cohort passes per
-flush, and the speedup ratio. Emits ``experiments/bench/BENCH_flush.json``.
+batches by the seed per-interest engine. Reported: multi-frontier flush
+seconds per round (compile time excluded via ``BrokerStats.rejit_s``),
+``rows_matched`` vs ``rows_distinct`` (the dedup efficacy the chain
+exists for), cohort passes, and the delta-vs-stacked / stacked-vs-roundtrip
+speedups. Emits ``experiments/bench/BENCH_flush.json``.
 
     PYTHONPATH=src python -m benchmarks.run --only flush
 """
@@ -43,54 +51,46 @@ from repro.core.propagation import ChangesetBatch
 
 from .common import csv_row, save_json
 
-N_SHAPES = 3
+N_POOL = 56  # entity pool: small, so composed D sides overlap heavily
 
 
 def _interest(i: int) -> InterestExpr:
-    cls = f"cls{i % 6}"
-    p = f"p{i % 6}"
-    shape = i % N_SHAPES
-    if shape == 0:
-        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
-        ogp = []
-    elif shape == 1:
-        bgp = [("?a", "rdf:type", cls)]
-        ogp = []
-    else:
-        bgp = [("?a", "rdf:type", cls), ("?a", p, "?v")]
-        ogp = [("?a", "foaf:page", "?w")]
+    # one shape cohort, all-distinct patterns: the bank stays wide (every
+    # subscriber adds two lanes) while membership stays shape-homogeneous
     return InterestExpr.parse(
-        source="synthetic://flush", target=f"local://sub{i}", bgp=bgp, ogp=ogp
+        source="synthetic://flush",
+        target=f"local://sub{i}",
+        bgp=[("?a", "rdf:type", f"cls{i}"), ("?a", f"p{i}", "?v")],
     )
 
 
 def _caps() -> StepCapacities:
+    # D-heavy: big removed-side capacity (the side the chain dedups),
+    # small added/ρ sides, shallow probes
     return StepCapacities(
-        n_removed=256, n_added=256, tau=1024, rho=512, pulls=256, fanout=4
+        n_removed=1024, n_added=128, tau=512, rho=128, pulls=128, fanout=2
     )
 
 
 def _stream(
-    d: Dictionary, n: int, rows_per_side: int = 48, seed: int = 0
+    d: Dictionary, n: int, d_rows: int = 96, a_rows: int = 24, seed: int = 0
 ) -> List[Tuple[np.ndarray, np.ndarray]]:
     rng = np.random.default_rng(seed)
 
     def rows(k):
         out = []
         for _ in range(k):
-            e = f"e{rng.integers(0, 400)}"
-            kind = rng.integers(0, 4)
+            e = f"e{rng.integers(0, N_POOL)}"
+            kind = rng.integers(0, 3)
             if kind == 0:
-                out.append((e, "rdf:type", f"cls{rng.integers(0, 6)}"))
+                out.append((e, "rdf:type", f"cls{rng.integers(0, 24)}"))
             elif kind == 1:
-                out.append((e, f"p{rng.integers(0, 6)}", f"o{rng.integers(0, 40)}"))
+                out.append((e, f"p{rng.integers(0, 24)}", f"o{rng.integers(0, 8)}"))
             else:
-                out.append((e, f"noise{rng.integers(0, 6)}", f"o{rng.integers(0, 40)}"))
+                out.append((e, f"noise{rng.integers(0, 4)}", f"o{rng.integers(0, 8)}"))
         return d.encode_triples(out)
 
-    return [
-        (rows(rows_per_side // 2), rows(rows_per_side)) for _ in range(n)
-    ]
+    return [(rows(d_rows), rows(a_rows)) for _ in range(n)]
 
 
 def _composed(changesets, start_id=1):
@@ -107,8 +107,10 @@ def _assert_outputs_equal(got, want, label):
             raise AssertionError(f"deferred outputs diverge: {label}/{field}")
 
 
-def _build(d: Dictionary, n_subs: int, device: bool) -> Tuple[Broker, list]:
-    broker = Broker(d, deferred_device_resident=device)
+def _build(d: Dictionary, n_subs: int, device: bool, delta: bool):
+    broker = Broker(
+        d, deferred_device_resident=device, delta_frontiers=delta
+    )
     policy = PushPolicy.max_staleness(1e9)  # only explicit flush fires
     subs = [
         broker.subscribe(_interest(i), _caps(), policy=policy)
@@ -118,49 +120,70 @@ def _build(d: Dictionary, n_subs: int, device: bool) -> Tuple[Broker, list]:
 
 
 def _run_rounds(
-    broker: Broker, subs: list, stream, n_rounds: int, per_round: int
+    broker: Broker, subs: list, stream, n_rounds: int, n_groups: int
 ) -> dict:
-    """Each round: feed, flush half (frontier split), feed, flush all —
-    so every full flush drains two distinct frontiers."""
-    half = subs[: len(subs) // 2]
+    """Each round staggers the subscriber groups across ``n_groups``
+    consumption frontiers (feed one changeset, drain one group, repeat),
+    then feeds once more and drains everything — so every full flush
+    evaluates ``n_groups`` distinct, heavily overlapping frontiers (every
+    subscriber sits at its own group's frontier by then)."""
+    groups = [subs[i::n_groups] for i in range(n_groups)]
     it = iter(stream)
     warm_stats = len(broker.stats)
+    n_subs = len(subs)
     for _ in range(n_rounds):
-        for _ in range(per_round):
+        for g in groups:
             broker.process_changeset(*next(it))
-        broker.flush(subs=half)
-        for _ in range(per_round):
-            broker.process_changeset(*next(it))
+            broker.flush(subs=g)
+        broker.process_changeset(*next(it))
         broker.flush()
-    flush_stats = [
-        st for st in broker.stats[warm_stats:] if st.total_added == 0
-    ]
-    eval_s = sum(st.elapsed_s - st.rejit_s for st in flush_stats)
+    stats = broker.stats[warm_stats:]
+    # the multi-frontier full flushes are where the chain dedups; the
+    # single-frontier group drains are identical work on every path
+    full = [st for st in stats if st.n_evaluated == n_subs]
+    flush_stats = [st for st in stats if st.total_added == 0]
+    eval_s = sum(st.elapsed_s - st.rejit_s for st in full)
     return {
-        "n_flushes": len(flush_stats),
+        "n_full_flushes": len(full),
         "flush_eval_s": eval_s,
         "flush_eval_s_per_round": eval_s / max(1, n_rounds),
-        "cohort_passes": sum(st.n_cohort_passes for st in flush_stats),
-        "rejit_s": sum(st.rejit_s for st in broker.stats[warm_stats:]),
+        "all_flush_eval_s": sum(
+            st.elapsed_s - st.rejit_s for st in flush_stats
+        ),
+        "cohort_passes": sum(st.n_cohort_passes for st in full),
+        "rows_matched": sum(st.rows_matched for st in full),
+        "rows_distinct": sum(st.rows_distinct for st in full),
+        "frontiers_per_full_flush": n_groups,
+        "rejit_s": sum(st.rejit_s for st in stats),
     }
 
 
-def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 6,
-        per_round: int = 4) -> str:
-    need = 2 * per_round * (n_rounds + 1)
+def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 5,
+        n_groups: int = 5) -> str:
+    need = (n_groups + 1) * (n_rounds + 3)
     streams = {}
     brokers = {}
-    for name, device in (("device", True), ("roundtrip", False)):
+    configs = (
+        ("delta", True, True),
+        ("stacked", True, False),
+        ("roundtrip", False, True),
+    )
+    for name, device, delta in configs:
         d = Dictionary()
         stream = _stream(d, need, seed=0)
-        brokers[name] = _build(d, n_subs, device)
+        brokers[name] = _build(d, n_subs, device, delta)
         streams[name] = stream
 
-    # -- warm + parity round: both paths vs eager composed-batch evaluation
-    warm = {name: streams[name][: 2 * per_round] for name in brokers}
+    # -- warm + parity round: all paths vs eager composed-batch evaluation,
+    # across a two-frontier stagger (half drained early)
+    warm_n = n_groups + 1
     flushed = {}
     for name, (broker, subs) in brokers.items():
-        for cs in warm[name]:
+        warm = streams[name][:warm_n]
+        for cs in warm[: warm_n // 2]:
+            broker.process_changeset(*cs)
+        broker.flush(subs=subs[: n_subs // 2])
+        for cs in warm[warm_n // 2 :]:
             broker.process_changeset(*cs)
         flushed[name] = broker.flush()
     d_ref = Dictionary()
@@ -170,34 +193,53 @@ def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 6,
         engine.register_interest(_interest(i), _caps())
         for i in range(n_subs)
     ]
-    d_np, a_np = _composed(ref_stream[: 2 * per_round])
+    half = warm_n // 2
+    comp_early = _composed(ref_stream[:half])
+    comp_late = _composed(ref_stream[half:warm_n], start_id=half + 1)
+    comp_full = _composed(ref_stream[:warm_n])
     for k, ref in enumerate(refs):
-        want = ref.apply(d_np, a_np)
-        _assert_outputs_equal(flushed["device"][k], want, f"device/{k}")
-        _assert_outputs_equal(flushed["roundtrip"][k], want, f"roundtrip/{k}")
+        if k < n_subs // 2:
+            ref.apply(*comp_early)
+            want = ref.apply(*comp_late)
+        else:
+            want = ref.apply(*comp_full)
+        for name in brokers:
+            _assert_outputs_equal(flushed[name][k], want, f"{name}/{k}")
+
+    # -- steady-state warm: one unmeasured round with the SAME frontier
+    # stagger as the timed rounds, so round 1 hits every executable,
+    # static-array, chain-membership, and bucket-shape cache
+    per_round = n_groups + 1
+    for name, (broker, subs) in brokers.items():
+        _run_rounds(broker, subs, streams[name][warm_n:], 1, n_groups)
 
     # -- timed rounds (steady state: executables + statics cached)
     results = {}
     for name, (broker, subs) in brokers.items():
         results[name] = _run_rounds(
-            broker, subs, streams[name][2 * per_round :], n_rounds, per_round
+            brokers[name][0], subs, streams[name][warm_n + per_round:],
+            n_rounds, n_groups,
         )
         results[name]["n_subscribers"] = n_subs
-        results[name]["changesets_per_round"] = 2 * per_round
 
-    speedup = results["roundtrip"]["flush_eval_s"] / max(
-        1e-9, results["device"]["flush_eval_s"]
+    delta_speedup = results["stacked"]["flush_eval_s"] / max(
+        1e-9, results["delta"]["flush_eval_s"]
     )
-    pass_ratio = results["roundtrip"]["cohort_passes"] / max(
-        1, results["device"]["cohort_passes"]
+    rt_speedup = results["roundtrip"]["flush_eval_s"] / max(
+        1e-9, results["delta"]["flush_eval_s"]
+    )
+    match_ratio = results["stacked"]["rows_matched"] / max(
+        1, results["delta"]["rows_matched"]
     )
     save_json(
         "BENCH_flush",
         {
-            "device_resident": results["device"],
+            "delta_chain": results["delta"],
+            "stacked_baseline": results["stacked"],
             "round_trip_baseline": results["roundtrip"],
-            "flush_speedup": speedup,
-            "cohort_pass_ratio": pass_ratio,
+            "delta_vs_stacked_speedup": delta_speedup,
+            "delta_vs_roundtrip_speedup": rt_speedup,
+            "matched_rows_ratio_stacked_over_delta": match_ratio,
             "parity": {
                 "checked_against_eager_composed_batches": True,
                 "subscribers_checked": n_subs,
@@ -205,11 +247,11 @@ def run(scale: float = 1.0, n_subs: int = 12, n_rounds: int = 6,
             "scale": scale,
         },
     )
-    us = results["device"]["flush_eval_s_per_round"] * 1e6
+    us = results["delta"]["flush_eval_s_per_round"] * 1e6
     return csv_row(
         "broker_flush",
         us,
-        f"speedup_x={speedup:.2f};passes "
-        f"{results['device']['cohort_passes']}"
-        f"vs{results['roundtrip']['cohort_passes']};subs={n_subs}",
+        f"delta_x={delta_speedup:.2f};rt_x={rt_speedup:.2f};rows "
+        f"{results['delta']['rows_matched']}"
+        f"vs{results['stacked']['rows_matched']};subs={n_subs}",
     )

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import subprocess
 import time
 from pathlib import Path
 from typing import Dict, List
@@ -22,6 +23,37 @@ from repro.core import InterestExpr, IrapEngine, StepCapacities
 from repro.data import DBpediaLikeGenerator, GeneratorConfig
 
 EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+_REPO_DIR = Path(__file__).resolve().parents[1]
+
+
+def bench_meta() -> dict:
+    """Provenance stamp for every emitted BENCH_*.json: git sha, jax
+    version, and device kind, so the perf trajectory in experiments/bench/
+    is attributable to a commit and a machine."""
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=_REPO_DIR, capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+        dirty = bool(
+            subprocess.run(
+                ["git", "status", "--porcelain"],
+                cwd=_REPO_DIR, capture_output=True, text=True, timeout=10,
+            ).stdout.strip()
+        )
+    except Exception:
+        sha, dirty = None, None
+    dev = jax.devices()[0]
+    return {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+    }
 
 FOOTBALL = InterestExpr.parse(
     source="synthetic://dbpedia-live",
@@ -78,6 +110,8 @@ def location_caps(scale=1.0, dedup=4096) -> StepCapacities:
 
 def save_json(name: str, payload) -> None:
     EXP_DIR.mkdir(parents=True, exist_ok=True)
+    if isinstance(payload, dict) and "meta" not in payload:
+        payload = {**payload, "meta": bench_meta()}
     (EXP_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
 
 

@@ -34,14 +34,16 @@ The broker is three layers, plus a distribution layer over them:
    stacked ``I_k = A ∪ ρ_k`` sets (Definition 14); bitset-lane routing hands
    each subscriber its local pattern bits.
 
-3. **Push scheduler — device-resident, frontier-stacked.** Each
+3. **Push scheduler — device-resident, delta-chained frontiers.** Each
    subscription carries a :class:`PushPolicy` (every-k-changesets, priority
    lane, or max-staleness, cf. the SPARQL refresh-scheduling literature).
    The host orchestrator accumulates pending changesets as composed batches
    (:func:`repro.core.propagation.compose_changesets` — Definition 6
    algebra over the device triple-set ops — one batch per consumption
    frontier), and a subscriber's cohort is routed through the fused pass
-   only when its policy fires; :meth:`Broker.flush` drains the rest. The
+   only when its policy fires; :meth:`Broker.flush` drains the rest (a
+   flush with nothing pending, and a fired frontier whose composed batch
+   is empty, return without touching statics or executables at all). The
    deferred path stays on device end-to-end: a fire consumes the batch's
    already-lex-sorted device stores (:meth:`~repro.core.propagation
    .ChangesetBatch.device_stores`), re-homing via
@@ -50,9 +52,28 @@ The broker is three layers, plus a distribution layer over them:
    one call their same-shape cohort invocations stack into ONE batched
    executable call (the frontier is one more padded, masked axis folded
    into the cohort's member dimension — see :func:`make_cohort_step`).
-   Subscribers attached to one target dataset replica (``subscribe(...,
-   share_target=True)``) share a single ``build_index(τ)`` inside the
-   cohort step.
+
+   Fired frontiers *overlap* — every batch composes a suffix of the same
+   stream — so the multi-frontier deleted-side pass is **delta-encoded**
+   rather than stacked: the flush builds a
+   :class:`~repro.core.propagation.FrontierChain` (the lex-sorted
+   distinct-row union of every fired D side plus per-frontier int32
+   membership bitmaps, probed — not assumed — with an exact containment
+   check) and ONE segmented bank pass
+   (:func:`repro.kernels.ops.pattern_bitmask_words_segmented`) matches
+   each distinct changeset row once, composing each frontier's words by
+   membership masking. Cohort members then share the single union store —
+   their ``f_map`` slot selects masked words instead of gathering
+   duplicated per-frontier stores — and rows outside a member's frontier
+   carry zero bits, which the evaluator's zero-bits discipline turns into
+   "no candidates, no signatures, no outputs", keeping every output
+   bit-identical to the stacked evaluation while the matched-row volume
+   drops from ~F× the union to ~1× (observable as
+   ``BrokerStats.rows_matched`` vs ``rows_distinct``).
+   ``Broker(delta_frontiers=False)`` preserves the stacked per-frontier
+   pass as the escape hatch / benchmark baseline. Subscribers attached to
+   one target dataset replica (``subscribe(..., share_target=True)``)
+   share a single ``build_index(τ)`` inside the cohort step.
 
 4. **Device-sharded cohort routing.** Cohorts are independently compiled,
    independently schedulable units, which makes them the natural unit of
@@ -104,6 +125,7 @@ import dataclasses
 import itertools
 import time
 from collections import OrderedDict
+from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -141,6 +163,7 @@ from .propagation import (
     ChangesetBatch,
     EvalOutputs,
     StepCapacities,
+    build_frontier_chain,
     combine_side_results,
 )
 from .triples import (
@@ -239,6 +262,7 @@ def make_cohort_step(
     caps: StepCapacities,
     id_capacity: int,
     matcher: Optional[Callable] = None,
+    delta: bool = False,
 ) -> Callable:
     """Build the jitted fused step for ONE shape-homogeneous cohort,
     spanning every deferred frontier that fires in the same call.
@@ -287,6 +311,25 @@ def make_cohort_step(
     out to members via ``tgt_map`` — subscribers attached to one target
     dataset share the index build. Inactive (padding) members contribute
     zero pattern bits and empty outputs.
+
+    ``delta=True`` builds the **delta-chain** variant: the per-frontier
+    ``d_sets`` tuple is replaced by ONE shared union store (the distinct D
+    rows across every fired frontier,
+    :class:`~repro.core.propagation.FrontierChain`), and ``d_words``
+    carries the per-frontier *membership-masked* words over the union rows
+    (one segmented bank pass upstream instead of one stacked pass per
+    frontier). Every member evaluates the same union store; its ``f_map``
+    slot selects its frontier's masked words, and rows outside that
+    frontier carry zero bits — which the evaluator turns into "no
+    candidates, no signature scatters, no outputs", exactly the sharded
+    path's ``row_mask`` discipline — so outputs stay bit-identical to the
+    stacked per-frontier evaluation while each distinct changeset row is
+    matched (and its store gathered) once instead of once per frontier::
+
+        step(d_union,      # TripleStore — union D rows, shared by members
+             d_words,      # Fp-tuple of uint32[|U|, W] masked union words
+             a_sets, bank_dev, uniq_taus, f_map, tgt_map, rhos,
+             pats, lanes, active) -> (tau1s, rho1s, outs)
     """
     eval_kw = dict(
         id_capacity=id_capacity,
@@ -298,6 +341,65 @@ def make_cohort_step(
     )
     eval_d = make_side_evaluator(plan, out_capacity=caps.n_removed, **eval_kw)
     eval_a = make_side_evaluator(plan, out_capacity=caps.n_i, **eval_kw)
+
+    if delta:
+
+        @jax.jit
+        def step_delta(
+            d_union: TripleStore,
+            d_words: Tuple[jax.Array, ...],
+            a_sets: Tuple[TripleStore, ...],
+            bank_dev: jax.Array,
+            uniq_taus: Tuple[TripleStore, ...],
+            f_map: jax.Array,
+            tgt_map: jax.Array,
+            rhos: Tuple[TripleStore, ...],
+            pats: jax.Array,
+            lanes: jax.Array,
+            active: jax.Array,
+        ):
+            nc = lanes.shape[0]
+            rhos_s = tree_stack(list(rhos))
+            uniq_s = tree_stack(list(uniq_taus))
+            a_stack = tree_stack(list(a_sets))
+            w_stack = jnp.stack(list(d_words))
+
+            a_mem = tree_gather(a_stack, f_map)
+            i_sets, ovf_i = jax.vmap(lambda a, r: union(a, r, caps.n_i))(
+                a_mem, rhos_s
+            )
+            a_bits = kops.pattern_lane_bits_batched(
+                i_sets.spo, bank_dev, lanes, active, matcher=matcher
+            )
+            # each member reads its frontier's membership-masked union
+            # words; the union STORE itself is one closed-over constant —
+            # no per-member store gather, no stacked per-frontier copies
+            d_bits = kops.lane_bits_batched(
+                jnp.take(w_stack, f_map, axis=0), lanes, active=active
+            )
+
+            tgts_u = jax.vmap(build_index)(uniq_s)
+            tgts = tree_gather(tgts_u, tgt_map)
+            taus = tree_gather(uniq_s, tgt_map)
+
+            d_res = jax.vmap(
+                lambda tgt, bits, p: eval_d(d_union, tgt, bits, p)
+            )(tgts, d_bits, pats)
+            a_res = jax.vmap(
+                lambda i_set, tgt, bits, p: eval_a(i_set, tgt, bits, p)
+            )(i_sets, tgts, a_bits, pats)
+            tau1, rho1, out = jax.vmap(
+                lambda dr, ar, t, r, o: combine_side_results(
+                    dr, ar, t, r, caps, o
+                )
+            )(d_res, a_res, taus, rhos_s, ovf_i)
+            return (
+                tuple(tree_index(tau1, i) for i in range(nc)),
+                tuple(tree_index(rho1, i) for i in range(nc)),
+                tuple(tree_index(out, i) for i in range(nc)),
+            )
+
+        return step_delta
 
     @jax.jit
     def step(
@@ -369,6 +471,8 @@ def make_sharded_cohort_step(
     axis: str,
     n_shards: int,
     matcher: Optional[Callable] = None,
+    delta: bool = False,
+    n_frontiers: int = 1,
 ) -> Callable:
     """:func:`make_cohort_step` with the member evaluations inside shard_map.
 
@@ -416,6 +520,21 @@ def make_sharded_cohort_step(
     global pool overflow that no single shard sees would skip the broker's
     capacity-doubling retry and break bit-identity exactly in the overflow
     regime. Sharded dedup needs a count-reduce hook (ROADMAP follow-on).
+
+    ``delta=True`` is the delta-chain variant (see :func:`make_cohort_step`):
+    the per-frontier ``d_sets`` tuple is replaced by the shared union store
+    plus its int32 membership bitmap (bits = the ``n_frontiers`` local
+    frontier slots), and each shard's block-split bank pass consumes the
+    UNION rows through one segmented match
+    (:func:`repro.kernels.ops.pattern_bitmask_words_segmented`) — one
+    compare pass per block regardless of how many frontiers fired, with the
+    per-frontier word planes composed by masking in registers before the
+    block gather-stitch::
+
+        step(d_union,  # TripleStore — union D rows (replicated)
+             d_seg,    # int32[|U|] membership bitmap, bit = frontier slot
+             a_sets, bank_dev, uniq_taus, uniq_tau_spo, uniq_tau_ops,
+             f_map, tgt_map, rhos, pats, lanes, active)
     """
     if caps.dedup_candidates:
         raise ValueError(
@@ -435,13 +554,48 @@ def make_sharded_cohort_step(
     eval_d = make_side_evaluator(plan, out_capacity=caps.n_removed, **eval_kw)
     eval_a = make_side_evaluator(plan, out_capacity=caps.n_i, **eval_kw)
 
+    def added_side_bits(my, i_spo, bank, lanes, active):
+        """Block-sliced fused match+route over I rows, block-gathered and
+        stitched at static offsets, then subject-hash ownership-masked —
+        the per-shard lane-bits discipline shared by both shard bodies."""
+        n_i_cap = i_spo.shape[1]
+        blk_i = -(-n_i_cap // n_shards)
+        starts_i = [min(i * blk_i, n_i_cap - blk_i) for i in range(n_shards)]
+        i_loc = jax.lax.dynamic_slice_in_dim(i_spo, my * blk_i, blk_i, axis=1)
+        a_loc = kops.pattern_lane_bits_batched(
+            i_loc, bank, lanes, active, matcher=matcher
+        )
+        a_gather = jax.lax.all_gather(a_loc, axis)  # (n, Nc, blk_i)
+        a_full = jnp.zeros((i_spo.shape[0], n_i_cap), jnp.uint32)
+        for i in range(n_shards):
+            a_full = jax.lax.dynamic_update_slice(
+                a_full, a_gather[i], (0, starts_i[i])
+            )
+        own_i = (i_spo[:, :, 0] != PAD) & (i_spo[:, :, 0] % n_shards == my)
+        return jnp.where(own_i, a_full, jnp.uint32(0))
+
+    def local_tau_indexes(uq_spo, uq_ops, tgt_map):
+        """This shard's τ partitions as per-member indexes (pre-sorted
+        host-side), gathered from the unique-replica axis."""
+        uqs, uqo = uq_spo[:, 0], uq_ops[:, 0]
+        tgts_u = TripleIndex(
+            spo=TripleStore(
+                spo=uqs,
+                n=jnp.sum(uqs[:, :, 0] != PAD, axis=1).astype(jnp.int32),
+            ),
+            ops=TripleStore(
+                spo=uqo,
+                n=jnp.sum(uqo[:, :, 0] != PAD, axis=1).astype(jnp.int32),
+            ),
+        )
+        return tree_gather(tgts_u, tgt_map)
+
     def shard_body(
         d_spo, d_ns, i_spo, i_ns, uq_spo, uq_ops,
         bank, f_map, tgt_map, pats, lanes, active,
     ):
         my = jax.lax.axis_index(axis)
         nfp, d_cap = d_spo.shape[0], d_spo.shape[1]
-        n_i_cap = i_spo.shape[1]
 
         # deleted-side bank words: each shard matches one row block; the
         # blocks all_gather at 1/n_shards the full-tensor volume and stitch
@@ -470,42 +624,66 @@ def make_sharded_cohort_step(
             active=active, row_mask=own_d,
         )
 
-        # added side: block-sliced fused match+route, block-gathered and
-        # stitched like the words, then ownership-masked (the per-shard
-        # masked lane-bits discipline)
-        blk_i = -(-n_i_cap // n_shards)
-        starts_i = [min(i * blk_i, n_i_cap - blk_i) for i in range(n_shards)]
-        i_loc = jax.lax.dynamic_slice_in_dim(i_spo, my * blk_i, blk_i, axis=1)
-        a_loc = kops.pattern_lane_bits_batched(
-            i_loc, bank, lanes, active, matcher=matcher
-        )
-        a_gather = jax.lax.all_gather(a_loc, axis)  # (n, Nc, blk_i)
-        a_full = jnp.zeros((i_spo.shape[0], n_i_cap), jnp.uint32)
-        for i in range(n_shards):
-            a_full = jax.lax.dynamic_update_slice(
-                a_full, a_gather[i], (0, starts_i[i])
-            )
-        own_i = (i_spo[:, :, 0] != PAD) & (i_spo[:, :, 0] % n_shards == my)
-        a_bits = jnp.where(own_i, a_full, jnp.uint32(0))
-
-        # local τ partitions as per-member indexes (pre-sorted host-side)
-        uqs, uqo = uq_spo[:, 0], uq_ops[:, 0]
-        tgts_u = TripleIndex(
-            spo=TripleStore(
-                spo=uqs,
-                n=jnp.sum(uqs[:, :, 0] != PAD, axis=1).astype(jnp.int32),
-            ),
-            ops=TripleStore(
-                spo=uqo,
-                n=jnp.sum(uqo[:, :, 0] != PAD, axis=1).astype(jnp.int32),
-            ),
-        )
-        tgt_mem = tree_gather(tgts_u, tgt_map)
+        a_bits = added_side_bits(my, i_spo, bank, lanes, active)
+        tgt_mem = local_tau_indexes(uq_spo, uq_ops, tgt_map)
         d_store = TripleStore(spo=d_mem_spo, n=jnp.take(d_ns, f_map, axis=0))
         i_store = TripleStore(spo=i_spo, n=i_ns)
         d_res = jax.vmap(
             lambda m, t, b, p: eval_d(m, t, b, p)
         )(d_store, tgt_mem, d_bits, pats)
+        a_res = jax.vmap(
+            lambda m, t, b, p: eval_a(m, t, b, p)
+        )(i_store, tgt_mem, a_bits, pats)
+        return jax.tree.map(lambda t: t[None], (d_res, a_res))
+
+    def shard_body_delta(
+        du_spo, du_n, d_seg, i_spo, i_ns, uq_spo, uq_ops,
+        bank, f_map, tgt_map, pats, lanes, active,
+    ):
+        my = jax.lax.axis_index(axis)
+        d_cap = du_spo.shape[0]
+        nc = lanes.shape[0]
+
+        # union-side bank words: ONE segmented match per row block (the
+        # per-frontier planes are composed by masking in registers), blocks
+        # all_gathered at 1/n_shards the volume and stitched at static
+        # offsets exactly like the stacked pass (overlapping clamped tail
+        # blocks carry identical planes, so overwrite is exact)
+        blk_d = -(-d_cap // n_shards)
+        starts_d = [min(i * blk_d, d_cap - blk_d) for i in range(n_shards)]
+        rows_loc = jax.lax.dynamic_slice_in_dim(
+            du_spo, my * blk_d, blk_d, axis=0
+        )
+        seg_loc = jax.lax.dynamic_slice_in_dim(
+            d_seg, my * blk_d, blk_d, axis=0
+        )
+        w_loc = kops.pattern_bitmask_words_segmented(
+            rows_loc, bank, seg_loc, n_frontiers, matcher=matcher
+        )  # (F, blk_d, W)
+        w_gather = jax.lax.all_gather(w_loc, axis)  # (n, F, blk_d, W)
+        d_words = jnp.zeros(
+            (n_frontiers, d_cap, w_loc.shape[-1]), jnp.uint32
+        )
+        for i in range(n_shards):
+            d_words = jax.lax.dynamic_update_slice_in_dim(
+                d_words, w_gather[i], starts_d[i], axis=1
+            )
+
+        # every member evaluates the same union rows; subject-hash
+        # ownership masks partition the downstream work across shards
+        own_d = (du_spo[:, 0] != PAD) & (du_spo[:, 0] % n_shards == my)
+        d_bits = kops.lane_bits_batched(
+            jnp.take(d_words, f_map, axis=0), lanes,
+            active=active, row_mask=jnp.broadcast_to(own_d[None], (nc, d_cap)),
+        )
+
+        a_bits = added_side_bits(my, i_spo, bank, lanes, active)
+        tgt_mem = local_tau_indexes(uq_spo, uq_ops, tgt_map)
+        d_store = TripleStore(spo=du_spo, n=du_n)  # shared union store
+        i_store = TripleStore(spo=i_spo, n=i_ns)
+        d_res = jax.vmap(
+            lambda t, b, p: eval_d(d_store, t, b, p)
+        )(tgt_mem, d_bits, pats)
         a_res = jax.vmap(
             lambda m, t, b, p: eval_a(m, t, b, p)
         )(i_store, tgt_mem, a_bits, pats)
@@ -517,16 +695,28 @@ def make_sharded_cohort_step(
         overflow=P(axis),
     )
     rep = P()
-    sharded_passes = shard_map_compat(
-        shard_body,
-        mesh,
-        in_specs=(
-            rep, rep, rep, rep,
-            P(None, axis), P(None, axis),
-            rep, rep, rep, rep, rep, rep,
-        ),
-        out_specs=(side_spec, side_spec),
-    )
+    if delta:
+        sharded_passes = shard_map_compat(
+            shard_body_delta,
+            mesh,
+            in_specs=(
+                rep, rep, rep, rep, rep,
+                P(None, axis), P(None, axis),
+                rep, rep, rep, rep, rep, rep,
+            ),
+            out_specs=(side_spec, side_spec),
+        )
+    else:
+        sharded_passes = shard_map_compat(
+            shard_body,
+            mesh,
+            in_specs=(
+                rep, rep, rep, rep,
+                P(None, axis), P(None, axis),
+                rep, rep, rep, rep, rep, rep,
+            ),
+            out_specs=(side_spec, side_spec),
+        )
 
     def merge_side(res: SideResult, out_cap: int, pull_cap: int) -> SideResult:
         """Union the per-shard results back into canonical per-member form."""
@@ -542,6 +732,53 @@ def make_sharded_cohort_step(
         return SideResult(
             interesting=inter, potential=pot, pulls=pulls, overflow=overflow
         )
+
+    if delta:
+
+        @jax.jit
+        def step_delta(
+            d_union: TripleStore,
+            d_seg: jax.Array,
+            a_sets: Tuple[TripleStore, ...],
+            bank_dev: jax.Array,
+            uniq_taus: Tuple[TripleStore, ...],
+            uniq_tau_spo: jax.Array,
+            uniq_tau_ops: jax.Array,
+            f_map: jax.Array,
+            tgt_map: jax.Array,
+            rhos: Tuple[TripleStore, ...],
+            pats: jax.Array,
+            lanes: jax.Array,
+            active: jax.Array,
+        ):
+            nc = lanes.shape[0]
+            rhos_s = tree_stack(list(rhos))
+            uniq_s = tree_stack(list(uniq_taus))
+            a_stack = tree_stack(list(a_sets))
+            a_mem = tree_gather(a_stack, f_map)
+            i_sets, ovf_i = jax.vmap(lambda a, r: union(a, r, caps.n_i))(
+                a_mem, rhos_s
+            )
+            d_res_sh, a_res_sh = sharded_passes(
+                d_union.spo, d_union.n, d_seg, i_sets.spo, i_sets.n,
+                uniq_tau_spo, uniq_tau_ops,
+                bank_dev, f_map, tgt_map, pats, lanes, active,
+            )
+            d_res = merge_side(d_res_sh, caps.n_removed, caps.pulls)
+            a_res = merge_side(a_res_sh, caps.n_i, caps.pulls)
+            taus = tree_gather(uniq_s, tgt_map)
+            tau1, rho1, out = jax.vmap(
+                lambda dr, ar, t, r, o: combine_side_results(
+                    dr, ar, t, r, caps, o
+                )
+            )(d_res, a_res, taus, rhos_s, ovf_i)
+            return (
+                tuple(tree_index(tau1, i) for i in range(nc)),
+                tuple(tree_index(rho1, i) for i in range(nc)),
+                tuple(tree_index(out, i) for i in range(nc)),
+            )
+
+        return step_delta
 
     @jax.jit
     def step(
@@ -623,6 +860,19 @@ def _assemble_cohort_statics(
     )
 
 
+@partial(jax.jit, static_argnames=("slots",))
+def _seg_local_bits(seg: jax.Array, slots: tuple) -> jax.Array:
+    """Remap a frontier-chain membership bitmap from global frontier
+    indices to a cohort's dense local frontier slots: output bit ``l`` is
+    input bit ``slots[l]``. The sharded delta step's segmented pass reads
+    local slots (they key ``f_map``), while the chain is built once per
+    flush over the global frontier order."""
+    out = jnp.zeros_like(seg)
+    for l, fi in enumerate(slots):
+        out = out | (((seg >> fi) & 1) << l)
+    return out
+
+
 _EMPTY_STORES: Dict[tuple, TripleStore] = {}
 
 
@@ -638,6 +888,35 @@ def _empty_cached(capacity: int, device=None) -> TripleStore:
             store = jax.device_put(store, device)
         store = _EMPTY_STORES.setdefault(key, store)
     return store
+
+
+_EMPTY_OUTPUTS: Dict[StepCapacities, EvalOutputs] = {}
+
+
+def _empty_outputs(caps: StepCapacities) -> EvalOutputs:
+    """Canonical all-empty :class:`EvalOutputs` at one capacity family.
+
+    The broker's empty-batch fast path returns this for a fired frontier
+    whose composed changeset has zero rows on both sides — nothing was
+    added or removed, so nothing propagates and no executable runs. Store
+    capacities match what the full evaluation would produce (``r``/``r_i``
+    at ``n_removed``, ``r'`` at ``pulls``, ``a`` at ``n_i + pulls``,
+    ``a_i`` at ``n_i``), so downstream consumers see identical shapes.
+    """
+    out = _EMPTY_OUTPUTS.get(caps)
+    if out is None:
+        out = _EMPTY_OUTPUTS.setdefault(
+            caps,
+            EvalOutputs(
+                r=_empty_cached(caps.n_removed),
+                r_i=_empty_cached(caps.n_removed),
+                r_prime=_empty_cached(caps.pulls),
+                a=_empty_cached(caps.n_i + caps.pulls),
+                a_i=_empty_cached(caps.n_i),
+                overflow=jnp.zeros((), bool),
+            ),
+        )
+    return out
 
 
 def _padded_bank_dev(patterns: np.ndarray) -> jax.Array:
@@ -830,6 +1109,16 @@ class BrokerStats:
     n_cohort_passes: int = 0  # cohort executables invoked
     batch_grows: int = 0  # cumulative ChangesetBatch pow2 doublings
     batch_shrinks: int = 0  # cumulative ChangesetBatch decay re-homes
+    # D-side bank-match volume this call: rows run through a match pass vs
+    # the distinct rows across the fired frontiers. The stacked pass
+    # re-matches shared suffix rows once per frontier (matched ≈ F × the
+    # union on overlap-heavy streams); the delta chain matches each
+    # distinct row once (matched == distinct), making dedup efficacy
+    # directly observable. Counts repeat on capacity-overflow retries
+    # (honest work accounting); single-changeset frontiers report their
+    # raw-row upper bound, mirroring the capacity guards.
+    rows_matched: int = 0
+    rows_distinct: int = 0
 
 
 @dataclasses.dataclass
@@ -840,6 +1129,11 @@ class _FrontierInput:
     requested capacity; the device-resident path re-homes sorted device
     stores (no transfer), the baseline path re-uploads host arrays.
     ``d_rows`` / ``a_rows`` bound the valid rows for the capacity guards.
+    ``since`` is the frontier's first composed changeset id (its age — the
+    delta chain picks the oldest fired frontier as the distinct-row
+    union), and ``d_native`` hands out the composed D store at its native
+    batch capacity for chain membership probes (None on the host
+    round-trip baseline, which never chains).
     """
 
     idxs: List[int]
@@ -847,6 +1141,8 @@ class _FrontierInput:
     a_rows: int
     d_store: Callable[[int], TripleStore]
     a_store: Callable[[int], TripleStore]
+    since: int = 0
+    d_native: Optional[Callable[[], TripleStore]] = None
 
 
 def _as_rows(arr) -> np.ndarray:
@@ -873,11 +1169,25 @@ class Broker:
 
     ``deferred_device_resident=False`` reproduces the PR 2 deferred path —
     every scheduled fire round-trips its composed batch device→host→device
-    and distinct frontiers run one sequential pass each — and exists as the
+    and distinct frontiers run one sequential pass each — and exists as a
     baseline for ``benchmarks/broker_flush.py``. The default keeps composed
     batches on device end-to-end (:meth:`ChangesetBatch.device_stores` +
     :func:`repro.core.triples.rehome`) and stacks same-shape cohorts fired
     from different frontiers into one batched executable call.
+
+    ``delta_frontiers=False`` reproduces the PR 3 *stacked* multi-frontier
+    flush — one deleted-side bank pass per fired frontier, per-frontier
+    store tuples gathered per member — and exists as the other baseline
+    for ``benchmarks/broker_flush.py``. The default delta-encodes
+    overlapping fired frontiers (module docstring, layer 3): one segmented
+    bank pass over the distinct-row union, per-frontier words by
+    membership masks, one shared union store per cohort — homed at the
+    union's own pow2 row bucket rather than the per-subscriber guard
+    capacity, so the D-side evaluation shapes track the distinct row
+    volume the chain just proved. Dedup efficacy
+    is observable through ``BrokerStats.rows_matched`` /
+    ``rows_distinct`` (and the cumulative ``Broker.rows_matched`` /
+    ``rows_distinct`` totals).
 
     ``mesh`` (a 1-D jax device mesh) turns on multi-device evaluation:
 
@@ -906,6 +1216,7 @@ class Broker:
         matcher: Optional[Callable] = None,
         cache_executables: bool = True,
         deferred_device_resident: bool = True,
+        delta_frontiers: bool = True,
         mesh=None,
         placement: CohortPlacement | None = None,
         shard_cohorts: bool = False,
@@ -918,6 +1229,7 @@ class Broker:
         self.bank = IncrementalPatternBank()
         self.cache_executables = cache_executables
         self.deferred_device_resident = deferred_device_resident
+        self.delta_frontiers = delta_frontiers
         self.mesh = mesh
         self.shard_cohorts = shard_cohorts
         if mesh is not None:
@@ -937,6 +1249,11 @@ class Broker:
         self.device_passes: Dict[int, int] = {}  # device idx -> cohort passes
         self.batch_grows = 0  # ChangesetBatch pow2 doublings (cumulative)
         self.batch_shrinks = 0  # ChangesetBatch decay re-homes (cumulative)
+        # cumulative D-side match volume vs distinct rows (dedup efficacy)
+        self.rows_matched = 0
+        self.rows_distinct = 0
+        self._rows_matched_acc = 0
+        self._rows_distinct_acc = 0
         self._grow_seen: Dict[int, int] = {}  # frontier id -> folded grows
         # τ-shard partitions per (sub serial, τ version, cap, n_shards)
         self._tau_parts_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
@@ -1132,7 +1449,10 @@ class Broker:
         bit-identical to what the seed per-interest engine would produce for
         the same composed changeset — or None when the subscriber's policy
         deferred it (its pending batch keeps accumulating). An empty broker
-        and 0-row ``removed``/``added`` sides are all well-defined.
+        and 0-row ``removed``/``added`` sides are all well-defined: a fire
+        whose composed batch is empty on both sides skips statics and
+        executables entirely and returns canonical all-empty outputs (τ/ρ
+        untouched — an empty changeset propagates nothing).
         """
         removed, added = _as_rows(removed), _as_rows(added)
         self._counter += 1
@@ -1141,6 +1461,7 @@ class Broker:
             return []
         t0 = time.perf_counter()
         self._rejit_acc = 0.0
+        self._rows_matched_acc = self._rows_distinct_acc = 0
 
         # layer 3: accumulate pending batches per consumption frontier
         for batch in self._batches.values():
@@ -1172,6 +1493,9 @@ class Broker:
         one pending changeset; returns one entry per subscriber in
         subscription order (None where nothing was pending). Stale handles
         (already unsubscribed) are skipped, consistent with None semantics.
+        A flush with nothing pending — and any fired frontier whose
+        composed batch is empty — returns without building statics or
+        touching executables (zero cohort passes).
         """
         if subs is None:
             targets = list(range(len(self.subs)))
@@ -1182,6 +1506,7 @@ class Broker:
             ]
         t0 = time.perf_counter()
         self._rejit_acc = 0.0
+        self._rows_matched_acc = self._rows_distinct_acc = 0
         fired = [k for k in targets if self.subs[k].since in self._batches]
         results, n_passes = self._fire(fired)
         self._sweep_batches(drained=bool(fired))
@@ -1210,17 +1535,30 @@ class Broker:
             return (not has_priority, since)
 
         ordered = sorted(groups, key=group_order)
-        fronts = [
-            self._frontier_input(groups[since], self._batches[since])
-            for since in ordered
-        ]
-        if self.deferred_device_resident:
+        # empty-batch fast path: a composed batch with zero rows on both
+        # sides delivers nothing — skip statics, executables, and passes
+        # entirely and hand its subscribers canonical empty outputs (their
+        # τ/ρ are untouched; consuming the batch is composition-neutral,
+        # <∅, ∅> composed with any future changeset is that changeset)
+        outs: Dict[int, EvalOutputs] = {}
+        fronts = []
+        for since in ordered:
+            batch = self._batches[since]
+            d_rows, a_rows = batch.row_bounds()
+            if d_rows == 0 and a_rows == 0:
+                for k in groups[since]:
+                    outs[k] = _empty_outputs(self.subs[k].caps)
+                continue
+            fronts.append(self._frontier_input(groups[since], batch))
+        if not fronts:
+            n_passes = 0
+        elif self.deferred_device_resident:
             # all fired frontiers in one evaluation: same-shape cohorts
             # stack across frontiers into one batched executable call
-            outs, n_passes = self._evaluate_frontiers(fronts)
+            o, n_passes = self._evaluate_frontiers(fronts)
+            outs.update(o)
         else:
             # PR 2 baseline: one sequential pass per frontier
-            outs = {}
             n_passes = 0
             for fr in fronts:
                 o, passes = self._evaluate_frontiers([fr])
@@ -1275,6 +1613,8 @@ class Broker:
                 a_rows=a_rows,
                 d_store=lambda cap: rehome(batch.device_stores()[0], cap),
                 a_store=lambda cap: rehome(batch.device_stores()[1], cap),
+                since=batch.first_id,
+                d_native=lambda: batch.device_stores()[0],
             )
         d_np, a_np = batch.arrays()
         return _FrontierInput(
@@ -1283,6 +1623,7 @@ class Broker:
             a_rows=int(a_np.shape[0]),
             d_store=lambda cap: from_array(jnp.asarray(d_np, jnp.int32), cap)[0],
             a_store=lambda cap: from_array(jnp.asarray(a_np, jnp.int32), cap)[0],
+            since=batch.first_id,
         )
 
     def _sweep_batches(self, drained: bool) -> None:
@@ -1393,6 +1734,17 @@ class Broker:
         mkey = id(self.matcher) if self.matcher is not None else None
         sharded = self.mesh is not None and self.shard_cohorts
         placed = self.mesh is not None and not self.shard_cohorts
+        # delta-chain eligibility: >= 2 overlapping frontiers on the
+        # device-resident path (a single frontier has nothing to dedup and
+        # keeps the eager executables untouched); the int32 membership
+        # bitmap caps the chain at 32 frontier slots
+        delta_ok = (
+            self.delta_frontiers
+            and self.deferred_device_resident
+            and len(fronts) >= 2
+            and next_pow2(len(fronts)) <= 32
+            and all(fr.d_native is not None for fr in fronts)
+        )
         n_passes = 0  # counts abandoned overflow-retry attempts too
         while True:
             for fr in fronts:
@@ -1414,14 +1766,68 @@ class Broker:
             nf = len(fronts)
             nfp = next_pow2(nf)
 
-            # fused pass 1: deleted side of EVERY frontier in one stacked
-            # bank pass (sliced per cohort so per-subscriber growth stays
-            # local); padding frontier slots carry empty stores. The
-            # sharded path computes its words in-graph instead (block-split
-            # across shards, block-gather-stitched), so it skips this pass.
-            d_stores = [fr.d_store(d_cap) for fr in fronts]
+            # delta-encoded frontier chain: the fired frontiers' D sides
+            # overlap (suffix composition), so build the distinct-row
+            # union + per-frontier membership bitmap and match each row
+            # ONCE; fall back to the stacked pass if containment fails
+            # (the chain proves it instead of assuming Def-6 nesting).
+            # The union is homed at its own pow2 row bucket, NOT the
+            # per-subscriber guard capacity: one store serves every
+            # member, so the whole D-side evaluation — candidate vectors,
+            # probes, pull sorts — runs at distinct-row shapes instead of
+            # F guard-capacity stores (the containment check doubles as
+            # the proof that the bucket holds every frontier's rows)
+            chain = None
+            u_cap = d_cap
+            if delta_ok:
+                base_fi = min(range(nf), key=lambda i: fronts[i].since)
+                u_cap = max(64, next_pow2(fronts[base_fi].d_rows))
+                c = build_frontier_chain(
+                    [fr.d_native() for fr in fronts], base_fi, u_cap
+                )
+                if c.covered:
+                    chain = c
+                else:
+                    u_cap = d_cap
+            if chain is not None:
+                matched = distinct = fronts[base_fi].d_rows
+            else:
+                matched = sum(fr.d_rows for fr in fronts)
+                distinct = max((fr.d_rows for fr in fronts), default=0)
+            self._rows_matched_acc += matched
+            self._rows_distinct_acc += distinct
+            self.rows_matched += matched
+            self.rows_distinct += distinct
+
+            # fused pass 1 over the deleted side. Delta chain: ONE
+            # segmented bank pass over the union rows emits every
+            # frontier's membership-masked words (padding slots' bits are
+            # simply absent from the bitmap). Stacked fallback: one bank
+            # pass per frontier, sliced per cohort; padding slots carry
+            # empty stores. The sharded path computes its words in-graph
+            # instead (block-split across shards, block-gather-stitched),
+            # so it skips this pass either way.
+            d_stores = None
+            if chain is None:
+                d_stores = [fr.d_store(d_cap) for fr in fronts]
             d_words_all = None
-            if not sharded:
+            if not sharded and chain is not None:
+                wkey = ("words-seg", u_cap, n_words_p, nfp, mkey)
+                miss = wkey not in self._exec_cache
+                words_fn = self._build_exec(
+                    wkey,
+                    lambda: jax.jit(
+                        lambda spo, seg, b: kops.pattern_bitmask_words_segmented(
+                            spo, b, seg, nfp, matcher=self.matcher
+                        )
+                    ),
+                    (chain.union.spo, chain.seg, bank_dev),
+                )
+                if miss:
+                    self.words_compiles += 1
+                # (nfp, u_cap, W) — frontier fi's words over the UNION rows
+                d_words_all = words_fn(chain.union.spo, chain.seg, bank_dev)
+            elif not sharded:
                 d_spos = tuple(st.spo for st in d_stores) + (
                     _empty_cached(d_cap).spo,
                 ) * (nfp - nf)
@@ -1503,13 +1909,17 @@ class Broker:
                 nm, nu = len(members), len(ugroups)
                 ncp, nup = next_pow2(nm), next_pow2(nu)
 
-                d_sets = tuple(
-                    TripleStore(
-                        spo=d_stores[fi].spo[: caps.n_removed],
-                        n=d_stores[fi].n,
+                d_sets = None
+                if chain is None:
+                    d_sets = tuple(
+                        TripleStore(
+                            spo=d_stores[fi].spo[: caps.n_removed],
+                            n=d_stores[fi].n,
+                        )
+                        for fi in fs_used
+                    ) + (_empty_cached(caps.n_removed, device),) * (
+                        nfcp - nfc
                     )
-                    for fi in fs_used
-                ) + (_empty_cached(caps.n_removed, device),) * (nfcp - nfc)
                 a_sets = tuple(a_of(fi, caps.n_added) for fi in fs_used) + (
                     _empty_cached(caps.n_added, device),
                 ) * (nfcp - nfc)
@@ -1520,10 +1930,16 @@ class Broker:
                     _empty_cached(caps.rho, device),
                 ) * (ncp - nm)
                 if sharded:
-                    ckey = (
-                        "cohort-sh", skey, caps, id_cap, ncp, nup, nfcp,
-                        n_words_p, self._n_shards, mkey,
-                    )
+                    if chain is not None:
+                        ckey = (
+                            "cohort-sh-delta", skey, caps, id_cap, ncp, nup,
+                            nfcp, n_words_p, u_cap, self._n_shards, mkey,
+                        )
+                    else:
+                        ckey = (
+                            "cohort-sh", skey, caps, id_cap, ncp, nup, nfcp,
+                            n_words_p, self._n_shards, mkey,
+                        )
                     (
                         f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
                     ) = self._static_arrays(ckey, fk, f_list, upos, ncp, nt)
@@ -1538,13 +1954,83 @@ class Broker:
                     uniq_ops_sh = jnp.stack(
                         [p[1] for p in parts] + pad_part
                     )
+                    if chain is not None:
+                        # membership bits remapped to this cohort's dense
+                        # local frontier slots (they key f_map)
+                        seg_local = _seg_local_bits(
+                            chain.seg, tuple(fs_used)
+                        )
+                        args = (
+                            chain.union,
+                            seg_local,
+                            a_sets,
+                            bank_dev,
+                            uniq_taus,
+                            uniq_spo_sh,
+                            uniq_ops_sh,
+                            f_map_d,
+                            tgt_map_d,
+                            rhos_c,
+                            pats_d,
+                            lanes_d,
+                            active_d,
+                        )
+                        builder = (
+                            lambda nfcp=nfcp: make_sharded_cohort_step(
+                                rep.plan, caps, id_cap, self.mesh,
+                                axis=self._shard_axis,
+                                n_shards=self._n_shards,
+                                matcher=self.matcher,
+                                delta=True, n_frontiers=nfcp,
+                            )
+                        )
+                    else:
+                        args = (
+                            d_sets,
+                            a_sets,
+                            bank_dev,
+                            uniq_taus,
+                            uniq_spo_sh,
+                            uniq_ops_sh,
+                            f_map_d,
+                            tgt_map_d,
+                            rhos_c,
+                            pats_d,
+                            lanes_d,
+                            active_d,
+                        )
+                        builder = lambda: make_sharded_cohort_step(  # noqa: E731
+                            rep.plan, caps, id_cap, self.mesh,
+                            axis=self._shard_axis, n_shards=self._n_shards,
+                            matcher=self.matcher,
+                        )
+                elif chain is not None:
+                    # delta chain: ONE union store for the whole cohort at
+                    # the union's own row bucket u_cap; per-frontier
+                    # membership-masked words over the union rows (a row
+                    # outside a member's frontier carries zero bits, so
+                    # the shared store adds no candidates — no per-frontier
+                    # slices, no per-member store gather, and the whole
+                    # D-side evaluation runs at distinct-row shapes)
+                    d_words = tuple(d_words_all[fi] for fi in fs_used)
+                    if nfcp > nfc:
+                        zero_w = jnp.zeros((u_cap, n_words_p), jnp.uint32)
+                        d_words = d_words + (zero_w,) * (nfcp - nfc)
+                    ckey = (
+                        "cohort-delta", skey, caps, id_cap, ncp, nup, nfcp,
+                        n_words_p, u_cap, mkey, dev,
+                    )
+                    (
+                        f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
+                    ) = self._static_arrays(
+                        ckey, fk, f_list, upos, ncp, nt, device=device
+                    )
                     args = (
-                        d_sets,
+                        chain.union,
+                        d_words,
                         a_sets,
-                        bank_dev,
+                        self._ensure_bank_dev(dev) if placed else bank_dev,
                         uniq_taus,
-                        uniq_spo_sh,
-                        uniq_ops_sh,
                         f_map_d,
                         tgt_map_d,
                         rhos_c,
@@ -1552,10 +2038,11 @@ class Broker:
                         lanes_d,
                         active_d,
                     )
-                    builder = lambda: make_sharded_cohort_step(  # noqa: E731
-                        rep.plan, caps, id_cap, self.mesh,
-                        axis=self._shard_axis, n_shards=self._n_shards,
-                        matcher=self.matcher,
+                    if placed:
+                        args = jax.device_put(args, device)
+                    builder = lambda: make_cohort_step(  # noqa: E731
+                        rep.plan, caps, id_cap, matcher=self.matcher,
+                        delta=True,
                     )
                 else:
                     d_words = tuple(
@@ -1687,5 +2174,7 @@ class Broker:
                 n_cohort_passes=n_passes,
                 batch_grows=self.batch_grows,
                 batch_shrinks=self.batch_shrinks,
+                rows_matched=self._rows_matched_acc,
+                rows_distinct=self._rows_distinct_acc,
             )
         )

@@ -39,6 +39,7 @@ from .triples import (
     difference,
     empty,
     from_array,
+    member,
     rehome,
     to_numpy,
     union,
@@ -159,6 +160,99 @@ def compose_changesets(
     return d, a, ovf_d | ovf_a
 
 
+@dataclasses.dataclass(frozen=True)
+class FrontierChain:
+    """Delta-encoded view of the D sides of several overlapping frontiers.
+
+    Flush frontiers overlap by construction: every live
+    :class:`ChangesetBatch` composes a *suffix* of the changeset stream, so
+    a row deleted once appears in the composed D of every frontier whose
+    suffix covers it. Evaluating each frontier's D independently therefore
+    re-matches the shared rows once per frontier. The chain factors that
+    redundancy out into
+
+    ``union``
+        the lex-sorted store of the **distinct** D rows across all chained
+        frontiers (under Definition 6 the D sides compose by pure union, so
+        the union of a set of suffix-frontiers *is* the oldest frontier's
+        composed D — the chain re-homes it, never re-sorts);
+
+    ``seg``
+        int32 per-row membership bitmap over the union rows: bit ``f`` set
+        iff union row ``i`` is in frontier ``f``'s composed D. Membership
+        is established by per-frontier binary-search probes of the union
+        rows against each frontier's own store — **not** by a prefix-OR
+        over the chain: the A sides compose non-monotonically (a row
+        added, removed, then re-added flips membership between frontiers),
+        so masks-by-probe is the primitive that stays correct for any
+        store handed in, and ``covered`` proves the D-side containment
+        instead of assuming it.
+
+    ``covered``
+        host bool: True iff every chained frontier's store is fully
+        contained in the union (``|union ∩ D_f| == |D_f|`` for all f).
+        The broker falls back to the stacked per-frontier pass when this
+        fails, so a chain can never silently drop rows.
+
+    One segmented bank-match pass over ``union``
+    (:func:`repro.kernels.ops.pattern_bitmask_words_segmented`) then yields
+    every frontier's match words — each distinct row is matched exactly
+    once, and rows outside a frontier carry zero words, which the
+    evaluator's zero-bits discipline turns into "contributes no candidates,
+    no signatures, no outputs".
+    """
+
+    union: TripleStore  # distinct D rows across the chained frontiers
+    seg: jax.Array  # int32[cap] membership bitmap (bit f = frontier f)
+    covered: bool  # every frontier's rows found in the union
+    n_frontiers: int
+
+
+@jax.jit
+def _chain_membership(
+    union: TripleStore, stores: Tuple[TripleStore, ...]
+) -> Tuple[jax.Array, jax.Array]:
+    """(seg bitmap over union rows, all-frontiers-covered flag)."""
+    valid = union.spo[:, 0] != PAD
+    seg = jnp.zeros((union.spo.shape[0],), jnp.int32)
+    covered = jnp.ones((), bool)
+    for f, st in enumerate(stores):
+        m = member(st, union.spo) & valid
+        seg = seg | (m.astype(jnp.int32) << f)
+        covered = covered & (jnp.sum(m, dtype=jnp.int32) == st.n)
+    return seg, covered
+
+
+def build_frontier_chain(
+    d_stores: Sequence[TripleStore], base: int, capacity: int
+) -> FrontierChain:
+    """Chain the D sides of the fired frontiers for one segmented pass.
+
+    ``d_stores`` are the frontiers' composed device stores (any
+    capacities, any order — index ``f`` becomes membership bit ``f``);
+    ``base`` names the frontier whose store is the distinct-row union
+    (the oldest fired frontier under Definition 6 suffix composition).
+    The union re-homes to ``capacity`` (pad/slice, never re-sort; the
+    caller's capacity guard ensures the base rows fit) and membership is
+    probed per frontier, so the result is correct — or reports
+    ``covered=False`` — even for stores that violate the suffix-nesting
+    assumption. Syncs one device bool per call (at fire points only,
+    matching :meth:`ChangesetBatch.row_bounds` discipline).
+    """
+    union = rehome(d_stores[base], capacity)
+    # re-home every store to the flush capacity so the jitted membership
+    # pass sees ONE shape signature per (capacity, n_frontiers) — batch
+    # buckets vary per round and would otherwise retrace every flush
+    homed = tuple(rehome(st, capacity) for st in d_stores)
+    seg, covered = _chain_membership(union, homed)
+    return FrontierChain(
+        union=union,
+        seg=seg,
+        covered=bool(covered),
+        n_frontiers=len(d_stores),
+    )
+
+
 @dataclasses.dataclass
 class ChangesetBatch:
     """Host-managed accumulator of composed, not-yet-delivered changesets
@@ -191,6 +285,18 @@ class ChangesetBatch:
     :func:`repro.core.triples.rehome` (pad/slice, never re-sort) only when
     a cohort's padded capacity differs. ``arrays()`` remains the host
     escape hatch for the round-trip baseline path and external consumers.
+
+    **Row provenance across composition.** ``first_id``/``last_id`` name
+    the exact changeset suffix a batch has composed, and Definition 6
+    composes the D sides by pure union — so when several frontiers fire
+    together, the batch with the smallest ``first_id`` provably holds the
+    distinct-row union of every fired D side, and each row's provenance
+    (which frontiers contain it) is recoverable by a lex probe of its own
+    sorted store. :func:`build_frontier_chain` packages exactly that as a
+    :class:`FrontierChain` — union store + per-frontier int32 membership
+    bitmap + a containment proof — so the flush evaluator can match each
+    distinct row once and compose per-frontier bitsets by masking instead
+    of re-matching the shared suffix rows once per frontier.
     """
 
     removed: TripleStore | None  # composed D (device); None while n == 1

@@ -95,6 +95,65 @@ def pattern_bitmask_words(
     return out.T[:n]
 
 
+def pattern_bitmask_words_segmented(
+    spo: jax.Array,
+    patterns: jax.Array,
+    seg: jax.Array,
+    n_seg: int,
+    *,
+    matcher=None,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """uint32[n_seg, N, W] segment-masked bank bitsets from ONE match pass.
+
+    ``seg``: int32[N] per-row membership bitmap — bit ``f`` set iff row
+    ``i`` belongs to segment ``f`` (bits >= ``n_seg`` ignored, ``n_seg <=
+    32``). Plane ``f`` equals ``pattern_bitmask_words(spo[members_f])``
+    scattered back to the full row space with non-member rows zeroed.
+
+    This is the delta-encoded frontier chain's primitive: the broker hands
+    it the lex-sorted union of the distinct D rows across all fired flush
+    frontiers plus each frontier's membership bits, so ``F`` overlapping
+    frontiers cost one bank pass over the union (the Pallas path masks the
+    per-frontier planes while the words are still in registers; the XLA
+    path packs one match matrix and masks per plane) instead of the F
+    stacked passes of the pre-delta scheduler.
+
+    With a custom ``matcher`` (distribution/testing hook) the words are
+    produced by the chunked :func:`pattern_bitmask_words` path — the hook
+    observes exactly ONE pass per 32-lane word, never one per segment.
+    """
+    if not 1 <= n_seg <= 32:
+        raise ValueError(f"n_seg must be in [1, 32], got {n_seg}")
+    if matcher is not None or patterns.shape[0] == 0 or not _want_kernel(
+        use_kernel
+    ):
+        if matcher is not None:
+            words = pattern_bitmask_words(spo, patterns, matcher=matcher)
+            member = (
+                (seg[None, :] >> jnp.arange(n_seg, dtype=jnp.int32)[:, None])
+                & 1
+            ) == 1
+            return jnp.where(member[:, :, None], words[None], jnp.uint32(0))
+        return ref.pattern_bitmask_words_segmented_ref(
+            spo, patterns, seg, n_seg
+        )
+    tile = 128 * triple_match.BLOCK_ROWS
+    n = spo.shape[0]
+    n_pad = -n % tile
+    if n_pad:
+        spo = jnp.concatenate(
+            [spo, jnp.full((n_pad, 3), PAD, dtype=jnp.int32)], axis=0
+        )
+        seg = jnp.concatenate(
+            [seg, jnp.zeros((n_pad,), dtype=seg.dtype)], axis=0
+        )
+    out = triple_match.triple_match_words_segmented_pallas(
+        spo, patterns, seg, n_seg=n_seg, interpret=not _on_tpu()
+    )
+    return jnp.swapaxes(out, 1, 2)[:, :n]
+
+
 def pattern_lane_bits_batched(
     spo_b: jax.Array,
     patterns: jax.Array,

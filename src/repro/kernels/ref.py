@@ -56,6 +56,31 @@ def pattern_bitmask_words_ref(spo: jax.Array, patterns: jax.Array) -> jax.Array:
     )
 
 
+def pattern_bitmask_words_segmented_ref(
+    spo: jax.Array, patterns: jax.Array, seg: jax.Array, n_seg: int
+) -> jax.Array:
+    """uint32[n_seg, N, W] segment-masked multi-word bank bitset.
+
+    ``seg``: int32[N] per-row segment membership bitmap — bit ``f`` set iff
+    row ``i`` belongs to segment ``f`` (the broker's delta-encoded frontier
+    chain encodes "union row i is in frontier f's composed D" this way).
+    Segment ``f``'s plane equals :func:`pattern_bitmask_words_ref` with the
+    non-member rows' words forced to zero — the match itself is evaluated
+    exactly ONCE per row and composed per segment by masking, which is the
+    whole point: ``n_seg`` overlapping row sets cost one bank pass, not
+    ``n_seg``. Bits of ``seg`` at or above ``n_seg`` are ignored.
+
+    Oracle for the single-invocation segmented kernel
+    (:func:`repro.kernels.triple_match.triple_match_words_segmented_pallas`)
+    and the vectorized XLA fallback.
+    """
+    words = pattern_bitmask_words_ref(spo, patterns)  # (N, W)
+    member = (
+        (seg[None, :] >> jnp.arange(n_seg, dtype=jnp.int32)[:, None]) & 1
+    ) == 1  # (n_seg, N)
+    return jnp.where(member[:, :, None], words[None, :, :], jnp.uint32(0))
+
+
 def pattern_lane_bits_ref(
     spo_b: jax.Array,
     patterns: jax.Array,

@@ -13,6 +13,13 @@ pattern-compare loop (:func:`_match_words`):
   ``W = ceil(P / 32)`` bank words produced in ONE kernel invocation, i.e.
   one HBM pass over the (s, p, o) tiles regardless of bank width,
   uint32[W, N] out (the ops wrapper transposes to uint32[N, W]).
+* :func:`triple_match_words_segmented_pallas` — segment-masked multi-word
+  emit: the bank words are computed once per tile and composed into up to 32
+  per-segment output planes by masking while still in registers (``seg``
+  holds one membership bit per segment and row). The broker's delta-encoded
+  frontier chain feeds it the distinct-row union of overlapping flush
+  frontiers, so ``F`` frontiers cost ONE pass over the union instead of one
+  stacked pass per frontier, uint32[F, W, N] out.
 * :func:`triple_match_lanes_pallas` — the broker's fully fused cohort path:
   multi-word emit PLUS bitset-lane routing PLUS the member (padding-lane)
   mask in one kernel. Each cohort member's triple tile is matched against
@@ -87,6 +94,26 @@ def _kernel_words(pat_ref, s_ref, p_ref, o_ref, out_ref, *, n_pat: int):
     accs = _match_words(pat_ref, s_ref[...], p_ref[...], o_ref[...], n_pat)
     for w, acc in enumerate(accs):
         out_ref[w] = acc
+
+
+def _kernel_words_segmented(
+    pat_ref, seg_ref, s_ref, p_ref, o_ref, out_ref, *, n_pat: int, n_seg: int
+):
+    """Segment-masked multi-word emit: one match, ``n_seg`` composed planes.
+
+    The bank words for the tile are computed ONCE (vreg resident) by the
+    shared compare loop; each segment's output plane is the same words with
+    the rows outside that segment forced to zero (``seg`` carries one
+    membership bit per segment and row). n_seg overlapping row subsets
+    therefore cost one pass over the (s, p, o) tile, not n_seg.
+    """
+    accs = _match_words(pat_ref, s_ref[...], p_ref[...], o_ref[...], n_pat)
+    seg = seg_ref[...]
+    zero = jnp.zeros(seg.shape, dtype=jnp.uint32)
+    for f in range(n_seg):
+        m = ((seg >> f) & 1) == 1
+        for w, acc in enumerate(accs):
+            out_ref[f, w] = jnp.where(m, acc, zero)
 
 
 def _kernel_lanes(
@@ -184,6 +211,57 @@ def triple_match_words_pallas(
         interpret=interpret,
     )(patterns, s2, p2, o2)
     return out.reshape(n_words, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "interpret"))
+def triple_match_words_segmented_pallas(
+    spo: jax.Array,
+    patterns: jax.Array,
+    seg: jax.Array,
+    *,
+    n_seg: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """uint32[n_seg, W, N] segment-masked bank bitset in one invocation.
+
+    ``seg``: int32[N] membership bitmap (bit ``f`` = row belongs to segment
+    ``f``; bits >= ``n_seg`` ignored). Each of the ``n_seg`` output planes
+    equals :func:`triple_match_words_pallas` with non-member rows zeroed,
+    but the pattern-compare loop runs ONCE per tile — the broker's
+    delta-encoded frontier chain uses this to match the distinct-row union
+    of overlapping flush frontiers a single time and compose the
+    per-frontier words by masking in registers. ``n_seg <= 32``; N must be
+    a multiple of 128 * BLOCK_ROWS.
+    """
+    n = spo.shape[0]
+    n_pat = patterns.shape[0]
+    n_words = max(1, -(-n_pat // 32))
+    assert 1 <= n_seg <= 32, n_seg
+    assert n % (128 * BLOCK_ROWS) == 0, n
+    rows = n // 128
+    s2 = spo[:, 0].reshape(rows, 128)
+    p2 = spo[:, 1].reshape(rows, 128)
+    o2 = spo[:, 2].reshape(rows, 128)
+    g2 = seg.astype(jnp.int32).reshape(rows, 128)
+
+    grid = (rows // BLOCK_ROWS,)
+    col_spec = pl.BlockSpec((BLOCK_ROWS, 128), lambda i: (i, 0))
+    pat_spec = pl.BlockSpec((max(1, n_pat), 3), lambda i: (0, 0))
+    out_spec = pl.BlockSpec(
+        (n_seg, n_words, BLOCK_ROWS, 128), lambda i: (0, 0, i, 0)
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel_words_segmented, n_pat=n_pat, n_seg=n_seg
+        ),
+        grid=grid,
+        in_specs=[pat_spec, col_spec, col_spec, col_spec, col_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_seg, n_words, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(patterns, g2, s2, p2, o2)
+    return out.reshape(n_seg, n_words, n)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -212,6 +212,257 @@ def test_device_resident_property_random_streams():
     prop()
 
 
+# ---------------------------------------------------------------------------
+# delta-encoded frontier chains
+# ---------------------------------------------------------------------------
+
+
+def test_delta_chain_matches_stacked_golden():
+    """The delta-chain flush (default) stays bit-identical to the PR 3
+    stacked pass (delta_frontiers=False) AND the PR 2 round-trip baseline
+    across mixed cadences, and its multi-frontier flushes match each
+    distinct D row once (rows_matched == rows_distinct) where the stacked
+    pass re-matches the shared suffix once per frontier."""
+    d, tau0 = _universe()
+    policies = [
+        PushPolicy.max_staleness(1e9),
+        PushPolicy.max_staleness(1e9),
+        PushPolicy.every(3),
+        PushPolicy.every(2),
+    ]
+    exprs = _exprs()
+    brokers = {
+        "delta": Broker(d, deferred_device_resident=True),
+        "stacked": Broker(
+            d, deferred_device_resident=True, delta_frontiers=False
+        ),
+        "roundtrip": Broker(d, deferred_device_resident=False),
+    }
+    assert brokers["delta"].delta_frontiers  # delta is the default
+    subs = {}
+    for name, b in brokers.items():
+        subs[name] = [
+            b.subscribe(exprs[i % len(exprs)], CAPS, initial_target=tau0,
+                        policy=pol)
+            for i, pol in enumerate(policies)
+        ]
+    stream = _stream(d, 6, seed=7)
+    for i, cs in enumerate(stream[:3]):
+        got = {n: b.process_changeset(*cs) for n, b in brokers.items()}
+        assert_results_identical(got["delta"], got["stacked"], ("step", i))
+        assert_results_identical(got["delta"], got["roundtrip"], ("step", i))
+    # stagger: drain the first slow subscriber early, then keep feeding so
+    # the final flush drains >= 2 overlapping frontiers
+    for n, b in brokers.items():
+        b.flush(subs=[subs[n][0]])
+    for i, cs in enumerate(stream[3:]):
+        got = {n: b.process_changeset(*cs) for n, b in brokers.items()}
+        assert_results_identical(got["delta"], got["stacked"], ("step2", i))
+    flushed = {n: b.flush() for n, b in brokers.items()}
+    assert_results_identical(flushed["delta"], flushed["stacked"], "flush")
+    assert_results_identical(flushed["delta"], flushed["roundtrip"], "flush")
+    assert_states_identical(brokers["delta"], brokers["stacked"], "final")
+    assert_states_identical(brokers["delta"], brokers["roundtrip"], "final")
+
+    # dedup efficacy is observable: the delta broker's match volume equals
+    # its distinct-row volume, and never exceeds the stacked broker's
+    st_d = brokers["delta"].stats[-1]
+    st_s = brokers["stacked"].stats[-1]
+    assert st_d.rows_matched == st_d.rows_distinct
+    assert st_s.rows_matched >= st_d.rows_matched
+    assert brokers["delta"].rows_matched == brokers["delta"].rows_distinct
+    assert brokers["stacked"].rows_matched >= brokers["stacked"].rows_distinct
+
+
+def test_delta_chain_nonmonotone_add_remove_readd_golden():
+    """A triple added, removed, then re-added across fired frontiers (the
+    non-monotone composition case) flushes bit-identically to eager seed
+    evaluation of each subscriber's composed batch."""
+    from repro.core import IrapEngine
+    from repro.core.propagation import ChangesetBatch
+
+    d, tau0 = _universe()
+    expr = _exprs()[2]  # ("?a", "p:goals", "?v") — matches T directly
+    t_add = d.encode_triples([("e:7", "p:goals", "99")])
+    noise = d.encode_triples([("e:8", "p:noise", "o1")])
+    z = np.zeros((0, 3), np.int32)
+    # cs1 adds T (+ a real D row), cs2 removes T, cs3 re-adds T: frontier
+    # [2..3] composes to <{T}, {T}>, frontier [1..3] to <{T, D1}, {T}> —
+    # T's A-membership flips between what the two frontiers absorbed
+    d1 = d.encode_triples([("e:1", "p:goals", "10")])
+    cs = [(d1, t_add), (t_add, noise), (z, t_add)]
+
+    broker = Broker(d)
+    pol = PushPolicy.max_staleness(1e9)
+    a = broker.subscribe(expr, CAPS, initial_target=tau0, policy=pol)
+    b = broker.subscribe(expr, CAPS, initial_target=tau0, policy=pol)
+
+    broker.process_changeset(*cs[0])
+    broker.flush(subs=[a])  # a's frontier advances past cs1
+    broker.process_changeset(*cs[1])
+    broker.process_changeset(*cs[2])
+    out = broker.flush()  # drains two overlapping frontiers at once
+    assert broker.stats[-1].rows_matched == broker.stats[-1].rows_distinct
+
+    d_ref = Dictionary()
+    tau_ref = d_ref.encode_triples(
+        [("e:1", A, "c:Athlete"), ("e:1", "p:goals", "10"),
+         ("e:2", A, "c:Team")]
+    )
+    t_ref = d_ref.encode_triples([("e:7", "p:goals", "99")])
+    noise_ref = d_ref.encode_triples([("e:8", "p:noise", "o1")])
+    d1_ref = d_ref.encode_triples([("e:1", "p:goals", "10")])
+    cs_ref = [(d1_ref, t_ref), (t_ref, noise_ref), (z, t_ref)]
+    engine = IrapEngine(d_ref)
+    ref_a = engine.register_interest(expr, CAPS, initial_target=tau_ref)
+    ref_b = engine.register_interest(expr, CAPS, initial_target=tau_ref)
+    ref_a.apply(*cs_ref[0])  # a consumed cs1 at the early flush
+    comp_a = ChangesetBatch.fresh(*cs_ref[1], 2)
+    comp_a.extend(*cs_ref[2], 3)
+    comp_b = ChangesetBatch.fresh(*cs_ref[0], 1)
+    comp_b.extend(*cs_ref[1], 2)
+    comp_b.extend(*cs_ref[2], 3)
+    want_a = ref_a.apply(*comp_a.arrays())
+    want_b = ref_b.apply(*comp_b.arrays())
+    for got, want, label in ((out[0], want_a, "a"), (out[1], want_b, "b")):
+        for field in ("r", "r_i", "r_prime", "a", "a_i"):
+            assert np.array_equal(
+                np.asarray(getattr(got, field).spo),
+                np.asarray(getattr(want, field).spo),
+            ), (label, field)
+    for sub, ref in ((a, ref_a), (b, ref_b)):
+        assert np.array_equal(np.asarray(sub.tau.spo), np.asarray(ref.tau.spo))
+        assert np.array_equal(np.asarray(sub.rho.spo), np.asarray(ref.rho.spo))
+
+
+def test_delta_chain_nonmonotone_property():
+    """Hypothesis sweep over tiny-pool streams (heavy add/remove/re-add
+    churn of the same triples across frontiers): delta-chain flushes stay
+    bit-identical to the stacked pass, step by step and at flush."""
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+    )
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(
+        seed=st.integers(0, 2**16),
+        ks=st.lists(st.integers(1, 4), min_size=2, max_size=4),
+        n_steps=st.integers(3, 7),
+    )
+    @settings(
+        max_examples=8,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def prop(seed, ks, n_steps):
+        rng = np.random.default_rng(seed)
+        d, tau0 = _universe()
+        # 4-triple pool: the same triples keep entering/leaving D and A,
+        # flipping membership between overlapping frontiers
+        pool = [("e:1", "p:goals", "10"), ("e:2", "p:goals", "11"),
+                ("e:1", A, "c:Athlete"), ("e:3", "p:rank", "2")]
+
+        def pick(k):
+            if k == 0:
+                return np.zeros((0, 3), np.int32)
+            idx = sorted(set(rng.integers(0, len(pool), size=k).tolist()))
+            return d.encode_triples([pool[i] for i in idx])
+
+        delta = Broker(d, deferred_device_resident=True)
+        stacked = Broker(
+            d, deferred_device_resident=True, delta_frontiers=False
+        )
+        exprs = _exprs()
+        for i, k in enumerate(ks):
+            for b in (delta, stacked):
+                b.subscribe(
+                    exprs[i % len(exprs)], CAPS, initial_target=tau0,
+                    policy=PushPolicy.every(k),
+                )
+        for i in range(n_steps):
+            cs = (pick(int(rng.integers(0, 3))), pick(int(rng.integers(0, 4))))
+            got = delta.process_changeset(*cs)
+            want = stacked.process_changeset(*cs)
+            assert_results_identical(got, want, ("step", i))
+        got, want = delta.flush(), stacked.flush()
+        assert_results_identical(got, want, "flush")
+        assert_states_identical(delta, stacked, "final")
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# flush fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_flush_fast_paths_no_fire_and_empty_batches():
+    """No pending work, all-deferred policies, and empty composed batches
+    all skip statics/executables entirely: zero cohort passes, zero
+    compiles."""
+    d, tau0 = _universe()
+    broker = Broker(d)
+    z = np.zeros((0, 3), np.int32)
+    slow = broker.subscribe(
+        _exprs()[0], CAPS, initial_target=tau0, policy=PushPolicy.every(100)
+    )
+    eager = broker.subscribe(
+        _exprs()[1], CAPS, initial_target=tau0, policy=PushPolicy()
+    )
+
+    # nothing pending: flush is a no-op that touches no executables
+    assert broker.flush() == [None, None]
+    assert broker.rejit_count == 0 and not broker._exec_cache
+    assert len(broker.stats) == 0
+
+    # an all-empty changeset: the eager policy fires but the composed
+    # batch is empty — canonical empty outputs, no cohort passes
+    outs = broker.process_changeset(z, z)
+    assert outs[0] is None  # slow subscriber deferred
+    assert outs[1] is not None
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        assert int(getattr(outs[1], field).n) == 0, field
+    assert not bool(outs[1].overflow)
+    assert broker.stats[-1].n_cohort_passes == 0
+    assert broker.rejit_count == 0 and not broker._exec_cache
+
+    # the slow subscriber's pending batch is empty too: flush drains it
+    # through the same fast path and the batch is garbage-collected
+    outs = broker.flush()
+    assert outs[0] is not None and int(outs[0].r.n) == 0
+    assert broker.stats[-1].n_cohort_passes == 0
+    assert broker.rejit_count == 0 and not broker._exec_cache
+    assert not broker._batches
+    assert slow.since == eager.since == broker._counter + 1
+
+    # a real changeset afterwards still evaluates normally
+    cs = (z, d.encode_triples([("e:1", "p:goals", "77")]))
+    outs = broker.process_changeset(*cs)
+    assert broker.stats[-1].n_cohort_passes >= 1
+    assert int(outs[1].a.n) >= 0  # evaluated, not fast-pathed
+
+
+def test_empty_batch_fast_path_matches_roundtrip():
+    """Both residency modes take the same empty-batch fast path, so their
+    results and replica states stay bit-identical around empty fires."""
+    d, tau0 = _universe()
+    dev, rtt = _twin_brokers(
+        d, tau0, [PushPolicy(), PushPolicy.every(2)]
+    )
+    z = np.zeros((0, 3), np.int32)
+    stream = [(z, z), (z, d.encode_triples([("e:1", "p:goals", "31")])),
+              (z, z), (z, z)]
+    for i, cs in enumerate(stream):
+        got = dev.process_changeset(*cs)
+        want = rtt.process_changeset(*cs)
+        assert_results_identical(got, want, ("step", i))
+        assert_states_identical(dev, rtt, ("step", i))
+    got, want = dev.flush(), rtt.flush()
+    assert_results_identical(got, want, "flush")
+    assert_states_identical(dev, rtt, "flush")
+
+
 def _burst_rows(d, n_raw, n_distinct, seed=0):
     """n_raw triples drawn from an n_distinct-triple pool (duplicate-heavy:
     raw rows force capacity growth, composed rows stay small)."""

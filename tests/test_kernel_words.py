@@ -134,6 +134,130 @@ def test_words_matcher_hook_still_chunked():
 
 
 # ---------------------------------------------------------------------------
+# segmented emit (delta-encoded frontier chains)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.triple_match import triple_match_words_segmented_pallas
+
+
+def _masked_planes(spo, pats, seg, n_seg):
+    """The pre-delta reference: one full words pass per segment, each over
+    only that segment's member rows (non-members replaced by PAD rows)."""
+    planes = []
+    for f in range(n_seg):
+        m = (np.asarray(seg) >> f) & 1
+        spo_f = np.where(
+            (m == 1)[:, None], np.asarray(spo), np.full((1, 3), PAD, np.int32)
+        )
+        w = ref.pattern_bitmask_words_ref(jnp.asarray(spo_f), pats)
+        # PAD substitution kills the match, matching the masked-plane spec
+        planes.append(jnp.where(jnp.asarray(m == 1)[:, None], w, jnp.uint32(0)))
+    return jnp.stack(planes)
+
+
+@pytest.mark.parametrize("n_seg", [1, 2, 5, 32])
+@pytest.mark.parametrize("n_pat", [1, 33, 64])
+def test_segmented_ref_matches_per_segment_passes(n_seg, n_pat):
+    """One masked union pass == n_seg independent per-frontier passes."""
+    rng = np.random.default_rng(n_seg * 100 + n_pat)
+    spo = jnp.asarray(_random_spo(rng, 300))
+    pats = jnp.asarray(_random_bank(rng, n_pat, tombstone_frac=0.1))
+    seg = jnp.asarray(
+        rng.integers(0, 2 ** min(n_seg + 2, 31), size=300).astype(np.int32)
+    )
+    got = ref.pattern_bitmask_words_segmented_ref(spo, pats, seg, n_seg)
+    want = _masked_planes(spo, pats, seg, n_seg)
+    assert got.shape == (n_seg, 300, max(1, -(-n_pat // 32)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_pat", [1, 5, 33, 64])
+@pytest.mark.parametrize("n", [1, 100, TILE, TILE + 1])
+def test_segmented_kernel_matches_ref(n_pat, n):
+    """One Pallas invocation (interpret mode) emits all segment planes."""
+    rng = np.random.default_rng(n_pat * 1000 + n)
+    n_seg = 3
+    spo = jnp.asarray(_random_spo(rng, n))
+    pats = jnp.asarray(_random_bank(rng, n_pat, tombstone_frac=0.15))
+    seg = jnp.asarray(rng.integers(0, 2**n_seg, size=n).astype(np.int32))
+    got = ops.pattern_bitmask_words_segmented(
+        spo, pats, seg, n_seg, use_kernel=True
+    )
+    want = ref.pattern_bitmask_words_segmented_ref(spo, pats, seg, n_seg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_kernel_direct_tile_aligned():
+    """The raw kernel wrapper (uint32[F, W, N] layout) on an exact tile."""
+    rng = np.random.default_rng(17)
+    spo = jnp.asarray(_random_spo(rng, TILE))
+    pats = jnp.asarray(_random_bank(rng, 40))
+    seg = jnp.asarray(rng.integers(0, 4, size=TILE).astype(np.int32))
+    got = triple_match_words_segmented_pallas(
+        spo, pats, seg, n_seg=2, interpret=True
+    )
+    want = ref.pattern_bitmask_words_segmented_ref(spo, pats, seg, 2)
+    assert got.shape == (2, 2, TILE)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.swapaxes(got, 1, 2)), np.asarray(want)
+    )
+
+
+def test_segmented_zero_membership_and_high_bits():
+    """Rows with no membership bits emit zero in every plane; bits at or
+    above n_seg are ignored."""
+    rng = np.random.default_rng(19)
+    spo = jnp.asarray(_random_spo(rng, 200, pad_frac=0.0, vocab=3))
+    pats = jnp.asarray(_random_bank(rng, 33, vocab=3))
+    seg = np.zeros(200, np.int32)
+    seg[::2] = 1 << 5  # only bits >= n_seg set: still zero planes
+    for use_kernel in (False, True):
+        got = ops.pattern_bitmask_words_segmented(
+            spo, pats, jnp.asarray(seg), 2, use_kernel=use_kernel
+        )
+        assert not np.asarray(got).any()
+    # all-members plane equals the plain words pass
+    seg_all = jnp.asarray(np.full(200, 1, np.int32))
+    for use_kernel in (False, True):
+        got = ops.pattern_bitmask_words_segmented(
+            spo, pats, seg_all, 1, use_kernel=use_kernel
+        )
+        want = ops.pattern_bitmask_words(spo, pats, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want))
+
+
+def test_segmented_matcher_hook_one_pass():
+    """A custom matcher observes ONE pass per 32-lane word — never one per
+    segment — and the masked planes still match the oracle."""
+    calls = []
+
+    def spy(spo, chunk):
+        calls.append(int(chunk.shape[0]))
+        return ref.pattern_bitmask_ref(spo, chunk)
+
+    rng = np.random.default_rng(13)
+    spo = jnp.asarray(_random_spo(rng, 64))
+    pats = jnp.asarray(_random_bank(rng, 40))
+    seg = jnp.asarray(rng.integers(0, 16, size=64).astype(np.int32))
+    got = ops.pattern_bitmask_words_segmented(spo, pats, seg, 4, matcher=spy)
+    assert calls == [32, 8]  # one chunked pass total, not per segment
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.pattern_bitmask_words_segmented_ref(spo, pats, seg, 4)),
+    )
+
+
+def test_segmented_rejects_bad_n_seg():
+    rng = np.random.default_rng(3)
+    spo = jnp.asarray(_random_spo(rng, 8))
+    pats = jnp.asarray(_random_bank(rng, 4))
+    seg = jnp.zeros(8, jnp.int32)
+    for bad in (0, 33):
+        with pytest.raises(ValueError):
+            ops.pattern_bitmask_words_segmented(spo, pats, seg, bad)
+
+
+# ---------------------------------------------------------------------------
 # fused emit + lane routing + member mask
 # ---------------------------------------------------------------------------
 
