@@ -1,0 +1,301 @@
+"""Subsumption-lattice fanout: flush cost tracks distinct interests,
+not subscriber count.
+
+The lattice layer (``core/interest.py`` + ``core/broker.py``) makes a
+flush evaluate each *distinct canonical interest* once and fan the result
+out to every subscriber holding it. This benchmark drives the claim with
+a fixed 64-expression interest pool built as 16 containment families x 4
+syntactic variants:
+
+  * parent        ``(?a p_f ?v)(?v q_f ?w)``        — a real bank row pair
+  * child         ``(e0 p_f ?v)(?v q_f ?w)``        — constant subject:
+                  canonically distinct, but its bound pattern rides a
+                  *virtual* lane refined from the parent's row
+                  (``kernels.ops.lane_refine``)
+  * renamed       parent with fresh variable names   — canonical duplicate
+  * reordered     parent with patterns swapped       — canonical duplicate
+
+Canonicalization collapses the 64 expressions to 32 distinct interests
+(16 parents + 16 children), half of whose bank lanes are virtual. The
+subscriber draw covers the pool round-robin first (so every distinct
+interest is resident at every sweep size) and Zipf-samples the rest —
+heavy skew, as real subscriber populations concentrate on few interests.
+
+Two sweeps are reported:
+
+  * subscribers 32 -> 10k over the fixed pool: distinct interests — and
+    therefore cohort slots — are constant, so flush time should be
+    near-flat (the acceptance line: <= 1.5x growth end to end) while
+    ``fanout_copies`` grows 312x,
+  * distinct interests 8 -> 32 at fixed subscribers: flush time should
+    scale with the distinct count — the cost unit the lattice reduces
+    delivery to.
+
+Before timing, a parity block runs lattice-on and lattice-off brokers
+plus the seed per-interest oracle (``IrapEngine`` on the *original*,
+un-canonicalized expressions) over the same changesets and asserts all
+three bit-identical per subscriber. Emits
+``experiments/bench/BENCH_fanout.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only fanout
+"""
+from __future__ import annotations
+
+import gc
+import time
+from collections import OrderedDict
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Broker,
+    Dictionary,
+    InterestExpr,
+    IrapEngine,
+    PushPolicy,
+    StepCapacities,
+)
+
+from .common import csv_row, save_json
+
+N_FAMILIES = 16  # containment families in the full pool
+N_ENTITIES = 64
+N_OBJECTS = 16
+ZIPF_S = 1.3  # subscriber skew over the pool
+
+
+def _pool(n_families: int = N_FAMILIES) -> List[InterestExpr]:
+    """4 * n_families expressions, 2 * n_families distinct canonical forms.
+
+    Parents and children interleave first so any prefix covers the same
+    parent:child mix (the resident base at the smallest sweep size already
+    holds every distinct interest); the pure duplicates come last.
+    """
+    first, dups = [], []
+    for f in range(n_families):
+        p, q = f"p{f}", f"q{f}"
+        first.append(
+            InterestExpr.parse(
+                "synthetic://fanout", f"local://fam{f}",
+                bgp=[("?a", p, "?v"), ("?v", q, "?w")],
+            )
+        )
+        first.append(
+            InterestExpr.parse(
+                "synthetic://fanout", f"local://fam{f}",
+                bgp=[("e0", p, "?v"), ("?v", q, "?w")],
+            )
+        )
+        dups.append(
+            InterestExpr.parse(
+                "synthetic://fanout", f"local://fam{f}",
+                bgp=[("?x", p, "?y"), ("?y", q, "?z")],
+            )
+        )
+        dups.append(
+            InterestExpr.parse(
+                "synthetic://fanout", f"local://fam{f}",
+                bgp=[("?v", q, "?w"), ("?a", p, "?v")],
+            )
+        )
+    return first + dups
+
+
+def _caps() -> StepCapacities:
+    return StepCapacities(
+        n_removed=1024, n_added=128, tau=512, rho=128, pulls=64, fanout=2
+    )
+
+
+def _dict() -> Dictionary:
+    d = Dictionary()
+    for f in range(N_FAMILIES):
+        d.encode_term(f"p{f}")
+        d.encode_term(f"q{f}")
+    for i in range(N_ENTITIES):
+        d.encode_term(f"e{i}")
+    for i in range(N_OBJECTS):
+        d.encode_term(f"o{i}")
+    return d
+
+
+def _stream(
+    d: Dictionary, n: int, d_rows: int = 256, a_rows: int = 32, seed: int = 0
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+
+    def rows(k):
+        out = []
+        for _ in range(k):
+            e = f"e{rng.integers(N_ENTITIES)}"
+            if rng.random() < 0.5:
+                out.append((e, f"p{rng.integers(N_FAMILIES)}",
+                            f"e{rng.integers(N_ENTITIES)}"))
+            else:
+                out.append((e, f"q{rng.integers(N_FAMILIES)}",
+                            f"o{rng.integers(N_OBJECTS)}"))
+        return d.encode_triples(out)
+
+    return [(rows(d_rows), rows(a_rows)) for _ in range(n)]
+
+
+def _draw(n_subs: int, pool_size: int, rng) -> List[int]:
+    # resident base: cover the pool round-robin so the distinct-interest
+    # set is identical at every sweep size; everyone after that is a
+    # Zipf-skewed repeat — pure fanout over already-resident lane groups
+    base = [i % pool_size for i in range(min(n_subs, pool_size))]
+    extra = (rng.zipf(ZIPF_S, size=max(0, n_subs - pool_size)) - 1) % pool_size
+    return base + list(extra)
+
+
+def _assert_outputs_equal(got, want, label):
+    for field in ("r", "r_i", "r_prime", "a", "a_i"):
+        gf, wf = getattr(got, field), getattr(want, field)
+        if int(gf.n) != int(wf.n) or not np.array_equal(
+            np.asarray(gf.spo), np.asarray(wf.spo)
+        ):
+            raise AssertionError(f"lattice outputs diverge: {label}/{field}")
+
+
+def _parity(n_changesets: int = 3) -> int:
+    """Lattice-on == lattice-off == seed oracle, per subscriber per flush.
+
+    Runs a reduced pool (4 families: 8 distinct interests, 12 subscribers
+    including one renamed and one reordered duplicate pair) so the seed
+    oracle stays cheap, but covers every variant kind the full pool uses:
+    canonical joins, virtual child lanes, and plain fanout.
+    """
+    pool = _pool(4)
+    picks = list(range(8)) + [8, 9, 10, 11]  # parents+children, then dups
+    caps = _caps()
+    policy = PushPolicy.max_staleness(1e9)
+
+    d_on, d_off, d_ref = _dict(), _dict(), _dict()
+    b_on = Broker(d_on, subsume_interests=True)
+    b_off = Broker(d_off, subsume_interests=False)
+    subs_on = [b_on.subscribe(pool[i], caps, policy=policy) for i in picks]
+    subs_off = [b_off.subscribe(pool[i], caps, policy=policy) for i in picks]
+    engine = IrapEngine(d_ref)
+    refs = [engine.register_interest(pool[i], caps) for i in picks]
+
+    stream_on = _stream(d_on, n_changesets, seed=11)
+    stream_off = _stream(d_off, n_changesets, seed=11)
+    stream_ref = _stream(d_ref, n_changesets, seed=11)
+    for ci in range(n_changesets):
+        b_on.process_changeset(*stream_on[ci])
+        b_off.process_changeset(*stream_off[ci])
+        outs_on = b_on.flush()
+        outs_off = b_off.flush()
+        for k, ref in enumerate(refs):
+            want = ref.apply(*stream_ref[ci])
+            _assert_outputs_equal(outs_on[k], want, f"on/{k}/cs{ci}")
+            _assert_outputs_equal(outs_off[k], want, f"off/{k}/cs{ci}")
+    assert b_on.stats[-1].distinct_interests == 8
+    assert b_off.stats[-1].distinct_interests == 12
+    assert b_on.stats[-1].fanout_copies == 12
+    return len(picks)
+
+
+def _measure(
+    n_subs: int,
+    n_families: int,
+    exec_cache,
+    n_rounds: int,
+    k_per_flush: int = 4,
+    n_warm: int = 3,
+) -> dict:
+    d = _dict()
+    pool = _pool(n_families)
+    rng = np.random.default_rng(1)
+    broker = Broker(d, subsume_interests=True)
+    broker._exec_cache = exec_cache  # identical shapes across sweep points
+    policy = PushPolicy.max_staleness(1e9)
+    for i in _draw(n_subs, len(pool), rng):
+        broker.subscribe(pool[i], _caps(), policy=policy)
+    stream = _stream(d, (n_rounds + n_warm) * k_per_flush)
+    it = iter(stream)
+    for _ in range(n_warm):
+        for _ in range(k_per_flush):
+            broker.process_changeset(*next(it))
+        broker.flush()
+    n0 = len(broker.stats)
+    # timed rounds: GC parked so a collection doesn't land inside one
+    # flush of one sweep point and skew the endpoint ratio
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        for _ in range(k_per_flush):
+            broker.process_changeset(*next(it))
+        broker.flush()
+    wall_s = (time.perf_counter() - t0) / n_rounds
+    gc.enable()
+    fires = [s for s in broker.stats[n0:] if s.n_evaluated > 0]
+    fire_s = sum(s.elapsed_s - s.rejit_s for s in fires) / len(fires)
+    last = fires[-1]
+    bank = broker.bank
+    return {
+        "n_subscribers": n_subs,
+        "pool_exprs": len(pool),
+        "distinct_interests": last.distinct_interests,
+        "fanout_copies": last.fanout_copies,
+        "flush_fire_s": fire_s,
+        "round_wall_s": wall_s,
+        "bank_real_rows": bank.n_real,
+        "bank_virtual_rows": bank.n_virtual,
+        "bank_words": bank.n_words,
+        "rejit_s": sum(s.rejit_s for s in broker.stats[n0:]),
+    }
+
+
+def run(scale: float = 1.0, n_rounds: int = 6) -> str:
+    n_max = max(320, int(round(10000 * scale)))
+    sizes = tuple(sorted({32, 320, 3200, n_max}))
+
+    subscribers_checked = _parity()
+
+    # one executable cache across sweep points: every point runs the same
+    # cohort shapes (that is the point — distinct interests are constant)
+    cache: "OrderedDict[tuple, object]" = OrderedDict()
+    sweep = [_measure(n, N_FAMILIES, cache, n_rounds) for n in sizes]
+    base, top = sweep[0], sweep[-1]
+    growth = top["flush_fire_s"] / base["flush_fire_s"]
+
+    # distinct-interest scaling at fixed fanout: fresh cache per pool size
+    # (cohort shapes differ), subscribers held at the mid sweep point
+    by_distinct = [
+        _measure(3200, nf, OrderedDict(), max(3, n_rounds // 2))
+        for nf in (4, 8, 16)
+    ]
+
+    save_json(
+        "BENCH_fanout",
+        {
+            "pool": {
+                "n_exprs": 4 * N_FAMILIES,
+                "n_families": N_FAMILIES,
+                "n_distinct_canonical": 2 * N_FAMILIES,
+                "zipf_s": ZIPF_S,
+            },
+            "subscriber_sweep": sweep,
+            "flush_growth_32_to_max": growth,
+            "fanout_growth_32_to_max": (
+                top["fanout_copies"] / base["fanout_copies"]
+            ),
+            "distinct_sweep": by_distinct,
+            "parity": {
+                "lattice_on_vs_off_vs_seed_oracle": True,
+                "subscribers_checked": subscribers_checked,
+            },
+            "scale": scale,
+        },
+    )
+    us = top["flush_fire_s"] * 1e6
+    return csv_row(
+        "broker_fanout",
+        us,
+        f"growth_32_to_{top['n_subscribers']}={growth:.2f}x;"
+        f"distinct={top['distinct_interests']};"
+        f"fanout={top['fanout_copies']}",
+    )

@@ -155,6 +155,12 @@ def _run_rounds(
         "rows_distinct": sum(st.rows_distinct for st in full),
         "frontiers_per_full_flush": n_groups,
         "rejit_s": sum(st.rejit_s for st in stats),
+        # lattice efficacy: cohort slots evaluated vs deliveries fanned out
+        # (equal here — every interest is distinct — but surfaced so the
+        # counters stay visible on the flush path too; broker_fanout is the
+        # collapse-heavy workload)
+        "distinct_interests": sum(st.distinct_interests for st in full),
+        "fanout_copies": sum(st.fanout_copies for st in full),
     }
 
 

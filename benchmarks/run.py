@@ -20,7 +20,8 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from . import broker_churn, broker_flush, broker_scaling, broker_shard
+    from . import broker_churn, broker_fanout, broker_flush
+    from . import broker_scaling, broker_shard
     from . import fig4_growth, kernels_micro
     from . import table1_changesets
     from . import table23_interest_eval as t23
@@ -35,6 +36,7 @@ def main() -> None:
         "broker_scaling": lambda: broker_scaling.run(args.scale),
         "broker_churn": lambda: broker_churn.run(args.scale),
         "broker_flush": lambda: broker_flush.run(args.scale),
+        "broker_fanout": lambda: broker_fanout.run(args.scale),
         "broker_shard": lambda: broker_shard.run(args.scale),
     }
     print("name,us_per_call,derived")

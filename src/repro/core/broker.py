@@ -7,7 +7,7 @@ per-changeset scan across subscribers with a single fused jitted step; this
 module additionally amortizes the *lifecycle*: subscribers come and go, and
 none of that churn may recompile work that belongs to other subscribers.
 
-The broker is three layers, plus a distribution layer over them:
+The broker is four layers, plus a distribution layer over them:
 
 1. **Cohort executable cache.** Subscribers whose interests share the same
    static plan shape (pattern kinds/slots/const-masks, Definition 7
@@ -34,7 +34,40 @@ The broker is three layers, plus a distribution layer over them:
    stacked ``I_k = A ∪ ρ_k`` sets (Definition 14); bitset-lane routing hands
    each subscriber its local pattern bits.
 
-3. **Push scheduler — device-resident, delta-chained frontiers.** Each
+3. **Interest-subsumption lattice + subscriber fanout** (default,
+   ``Broker(subsume_interests=False)`` preserves the per-subscriber PR 5
+   path as the baseline). The paper's deployment is many consumers holding
+   *overlapping* interests over one stream, so distinct interests — not
+   subscribers — are the unit of evaluation cost (cf. Fedra's
+   containment-driven source selection and Knuth & Hartig's
+   distinct-queries scheduling):
+
+   * **canonical lane groups.** Every ``subscribe()`` canonicalizes its
+     expression (:func:`repro.core.interest.canonicalize_expr`: skeleton
+     pattern sort + bijective variable renaming), so expressions that
+     differ only in pattern order / variable names land on identical
+     compiled plans and bank lanes. A new subscription whose canonical
+     key, capacities, policy, frontier, and τ/ρ state provably match an
+     existing lineage auto-joins it (the previously opt-in
+     ``share_target`` detection, now automatic for the exact-duplicate
+     case); members of one lineage occupy ONE cohort slot per fire — the
+     lane result is computed once and **fanned out host-side** to every
+     member's output, with per-subscriber τ/ρ applied only at commit, so
+     delivery is O(1) executable work per distinct interest
+     (``BrokerStats.distinct_interests`` vs ``fanout_copies``).
+   * **containment DAG.** Bank rows are deduplicated pattern-wise and a
+     row whose pattern is *strictly contained* by an existing row's (a
+     constant where the parent has a variable) becomes a **virtual lane**
+     (:class:`~repro.core.interest.SubsumptionBank`): it occupies no bank
+     width in the deleted-side words pass — its words are the parent
+     lane's already-emitted words ANDed with the cheap residual-constant
+     compare (:func:`repro.kernels.ops.lane_refine`), concatenated after
+     the real planes so lane routing is oblivious to the distinction.
+     The added-side fused pass matches virtual rows as materialized
+     patterns in the extended bank (refining the fused kernel is a
+     ROADMAP follow-on).
+
+4. **Push scheduler — device-resident, delta-chained frontiers.** Each
    subscription carries a :class:`PushPolicy` (every-k-changesets, priority
    lane, or max-staleness, cf. the SPARQL refresh-scheduling literature).
    The host orchestrator accumulates pending changesets as composed batches
@@ -75,7 +108,7 @@ The broker is three layers, plus a distribution layer over them:
    one target dataset replica (``subscribe(..., share_target=True)``)
    share a single ``build_index(τ)`` inside the cohort step.
 
-4. **Device-sharded cohort routing.** Cohorts are independently compiled,
+5. **Device-sharded cohort routing.** Cohorts are independently compiled,
    independently schedulable units, which makes them the natural unit of
    *distribution*: with ``Broker(mesh=...)`` a
    :class:`~repro.core.distributed.CohortPlacement` policy places each
@@ -156,6 +189,8 @@ from .interest import (
     IncrementalPatternBank,
     InterestExpr,
     PatternBank,
+    SubsumptionBank,
+    canonicalize_expr,
     compile_interest,
     next_pow2,
 )
@@ -198,7 +233,7 @@ def _plan_shape_key(plan: CompiledInterest):
 
 
 # ---------------------------------------------------------------------------
-# layer 3: push scheduling policy
+# layer 4: push scheduling policy
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -1048,6 +1083,9 @@ class BrokerSubscription:
         self.serial = next(BrokerSubscription._serial_counter)
         self.plan_version = 0
         self.plan = compile_interest(expr, dictionary)
+        # cohort-grouping key, cached: rebuilding it per fire costs O(plan
+        # rows) python per subscriber, which dominates large-fanout flushes
+        self.shape_key = _plan_shape_key(self.plan)
         self.id_capacity = dictionary.id_capacity * caps.id_headroom
         self.tau = empty(caps.tau)
         self.rho = empty(caps.rho)
@@ -1063,6 +1101,10 @@ class BrokerSubscription:
         # when their replica state is provably identical.
         self.share_tag: object = self
         self.epoch: int = 0
+        # canonical lane-group signature (canonical-form key, caps, policy)
+        # — the broker's automatic exact-duplicate collapse index; None when
+        # the lattice is off
+        self.canon_sig: Optional[tuple] = None
 
     def recompile(self, caps: StepCapacities | None = None) -> None:
         """Refresh plan/capacities after dictionary or capacity growth."""
@@ -1070,6 +1112,7 @@ class BrokerSubscription:
             self.caps = caps
         self.plan_version += 1
         self.plan = compile_interest(self.expr, self.dictionary)
+        self.shape_key = _plan_shape_key(self.plan)
         self.id_capacity = self.dictionary.id_capacity * self.caps.id_headroom
         self.tau, _ = union(empty(self.caps.tau), self.tau, self.caps.tau)
         self.rho, _ = union(empty(self.caps.rho), self.rho, self.caps.rho)
@@ -1119,6 +1162,15 @@ class BrokerStats:
     # raw-row upper bound, mirroring the capacity guards.
     rows_matched: int = 0
     rows_distinct: int = 0
+    # lattice efficacy this call: cohort slots actually evaluated vs
+    # subscriber deliveries those slots fanned out to. With the
+    # subsumption lattice on, identical interests collapse into one lane
+    # group, so distinct_interests tracks the distinct-interest pool while
+    # fanout_copies tracks subscribers — their ratio is the O(1)-copies
+    # win. Lattice off: one slot per subscriber, so the two are equal.
+    # Counts repeat on capacity-overflow retries (honest work accounting).
+    distinct_interests: int = 0
+    fanout_copies: int = 0
 
 
 @dataclasses.dataclass
@@ -1143,6 +1195,23 @@ class _FrontierInput:
     a_store: Callable[[int], TripleStore]
     since: int = 0
     d_native: Optional[Callable[[], TripleStore]] = None
+
+
+def _stores_equal(a: TripleStore, b: TripleStore) -> bool:
+    """Bit-equality of two canonical stores' valid rows (capacity-agnostic).
+
+    Stores are lex-sorted and deduplicated, so set equality and row-array
+    equality coincide; the common all-empty case short-circuits on the row
+    counts without pulling the arrays to host.
+    """
+    if a is b:
+        return True
+    na, nb = int(a.n), int(b.n)
+    if na != nb:
+        return False
+    if na == 0:
+        return True
+    return bool(np.array_equal(to_numpy(a), to_numpy(b)))
 
 
 def _as_rows(arr) -> np.ndarray:
@@ -1179,7 +1248,7 @@ class Broker:
     flush — one deleted-side bank pass per fired frontier, per-frontier
     store tuples gathered per member — and exists as the other baseline
     for ``benchmarks/broker_flush.py``. The default delta-encodes
-    overlapping fired frontiers (module docstring, layer 3): one segmented
+    overlapping fired frontiers (module docstring, layer 4): one segmented
     bank pass over the distinct-row union, per-frontier words by
     membership masks, one shared union store per cohort — homed at the
     union's own pow2 row bucket rather than the per-subscriber guard
@@ -1188,6 +1257,18 @@ class Broker:
     is observable through ``BrokerStats.rows_matched`` /
     ``rows_distinct`` (and the cumulative ``Broker.rows_matched`` /
     ``rows_distinct`` totals).
+
+    ``subsume_interests=False`` reproduces the PR 5 *per-subscriber*
+    broker — raw expressions, opt-in ``share_target`` only, one cohort
+    slot per subscriber, no virtual bank lanes — and exists as the
+    baseline for ``benchmarks/broker_fanout.py``. The default builds the
+    interest-subsumption lattice (module docstring, layer 3): canonical
+    expressions, automatic exact-duplicate lane groups with host-side
+    result fanout, and containment-refined virtual lanes
+    (:func:`repro.kernels.ops.lane_refine`). Lattice efficacy is
+    observable through ``BrokerStats.distinct_interests`` /
+    ``fanout_copies`` (and the cumulative broker totals of the same
+    names).
 
     ``mesh`` (a 1-D jax device mesh) turns on multi-device evaluation:
 
@@ -1217,6 +1298,7 @@ class Broker:
         cache_executables: bool = True,
         deferred_device_resident: bool = True,
         delta_frontiers: bool = True,
+        subsume_interests: bool = True,
         mesh=None,
         placement: CohortPlacement | None = None,
         shard_cohorts: bool = False,
@@ -1226,7 +1308,10 @@ class Broker:
         self.matcher = matcher
         self.subs: List[BrokerSubscription] = []
         self.stats: List[BrokerStats] = []
-        self.bank = IncrementalPatternBank()
+        self.subsume_interests = subsume_interests
+        self.bank = self._new_bank()
+        # canonical lane-group signature -> lineage root (auto-collapse)
+        self._share_index: Dict[tuple, BrokerSubscription] = {}
         self.cache_executables = cache_executables
         self.deferred_device_resident = deferred_device_resident
         self.delta_frontiers = delta_frontiers
@@ -1254,6 +1339,15 @@ class Broker:
         self.rows_distinct = 0
         self._rows_matched_acc = 0
         self._rows_distinct_acc = 0
+        # cumulative lattice efficacy: cohort slots evaluated vs subscriber
+        # deliveries fanned out from them (see BrokerStats)
+        self.distinct_interests = 0
+        self.fanout_copies = 0
+        self._distinct_acc = 0
+        self._fanout_acc = 0
+        # Σ plan.n_total over live subscriptions, maintained incrementally
+        # (recomputing it per stats record is O(subscribers) python)
+        self._lanes_raw = 0
         self._grow_seen: Dict[int, int] = {}  # frontier id -> folded grows
         # τ-shard partitions per (sub serial, τ version, cap, n_shards)
         self._tau_parts_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
@@ -1277,6 +1371,11 @@ class Broker:
         self._epoch_next = 0
         self.epoch_intern_max = 4096
         self._bank_dev: jax.Array | None = None
+        # real-rows-only padded bank + (parents, residual) refine operands
+        # for the deleted-side words pass (== _bank_dev / None without
+        # virtual lanes); refreshed together with _bank_dev per version
+        self._bank_real_dev: jax.Array | None = None
+        self._refine_dev: Optional[Tuple[jax.Array, jax.Array]] = None
         self._bank_version = -1
         self._batches: Dict[int, ChangesetBatch] = {}
         self._counter = 0
@@ -1286,6 +1385,12 @@ class Broker:
         self.words_compiles = 0  # shared D-side bank-pass compiles
 
     # -- interest manager ---------------------------------------------------
+
+    def _new_bank(self):
+        return (
+            SubsumptionBank() if self.subsume_interests
+            else IncrementalPatternBank()
+        )
 
     def subscribe(
         self,
@@ -1297,18 +1402,32 @@ class Broker:
     ) -> BrokerSubscription:
         """Register an interest; only its own cohort will (re)compile.
 
-        ``share_target=True`` attaches the new subscription to an existing
-        identical one (same expression, capacities, and policy) when
-        present: it adopts that replica's current τ/ρ state and the two
-        share one ``build_index(τ)`` inside the cohort step from then on —
-        the paper's many-readers-of-one-target-dataset case. Falls back to
-        an independent subscription when no compatible root exists.
+        With the subsumption lattice on (the default) the expression is
+        replaced by its canonical form
+        (:func:`repro.core.interest.canonicalize_expr`) before compiling, so
+        expressions differing only in pattern order / variable naming share
+        plans, bank lanes, and — via the automatic lineage join below —
+        cohort slots. A new subscription auto-joins an existing lane group
+        when its canonical key, capacities, policy, consumption frontier,
+        and τ/ρ state are all provably equal to the group root's (the join
+        is then a pure optimization: the evaluation it skips would have
+        produced bit-identical results); from then on the group occupies
+        one cohort slot per fire and results fan out to every member.
+
+        ``share_target=True`` keeps its shared-replica semantics: the new
+        subscription *adopts* an existing identical subscription's current
+        τ/ρ state and frontier (rather than requiring them to match), the
+        paper's many-readers-of-one-target-dataset case. Falls back to an
+        independent subscription when no compatible root exists.
         """
         if self.shard_cohorts and caps.dedup_candidates:
             raise ValueError(
                 "shard_cohorts=True requires caps.dedup_candidates == 0 "
                 "(see make_sharded_cohort_step)"
             )
+        canon_key = None
+        if self.subsume_interests:
+            expr, canon_key = canonicalize_expr(expr)
         sub = BrokerSubscription(expr, self.dictionary, caps, policy=policy)
         sub.since = self._counter + 1
         root = self._find_share_root(sub) if share_target else None
@@ -1318,11 +1437,45 @@ class Broker:
             sub.since, sub.last_push_t = root.since, root.last_push_t
         elif initial_target is not None and initial_target.size:
             sub.init_target(initial_target)
+        if canon_key is not None:
+            # init_target may have doubled caps, so the signature reads the
+            # final capacities
+            sub.canon_sig = (canon_key, sub.caps, sub.policy)
+            if root is None:
+                auto = self._auto_join_root(sub)
+                if auto is not None:
+                    sub.tau, sub.rho = auto.tau, auto.rho
+                    sub.share_tag, sub.epoch = auto.share_tag, auto.epoch
+            self._share_index.setdefault(sub.canon_sig, sub)
         sub.lanes = self.bank.add_plan(sub.plan)
         self.subs.append(sub)
+        self._lanes_raw += sub.plan.n_total
         if not self.cache_executables:
             self._exec_cache.clear()  # PR 1 full-rebuild baseline behavior
         return sub
+
+    def _auto_join_root(
+        self, sub: BrokerSubscription
+    ) -> BrokerSubscription | None:
+        """The lane-group root ``sub`` may join without changing semantics.
+
+        Joining shares the root's τ-lineage tag and epoch, which is sound
+        exactly when the new subscription's observable state already equals
+        the root's: same canonical interest + capacities + policy (the
+        index key), same consumption frontier, and bit-equal τ/ρ. Anything
+        less keeps the subscription independent — a missed collapse, never
+        a wrong one.
+        """
+        root = self._share_index.get(sub.canon_sig)
+        if (
+            root is None
+            or root.caps != sub.caps  # root may have outgrown the signature
+            or root.since != sub.since
+            or not _stores_equal(root.tau, sub.tau)
+            or not _stores_equal(root.rho, sub.rho)
+        ):
+            return None
+        return root
 
     def _find_share_root(
         self, sub: BrokerSubscription
@@ -1342,10 +1495,22 @@ class Broker:
         self.subs.remove(sub)
         self.bank.remove_plan(sub.lanes)
         sub.lanes = ()
+        self._lanes_raw -= sub.plan.n_total
+        sig = sub.canon_sig
+        if sig is not None and self._share_index.get(sig) is sub:
+            # another member of the lane group (if any) becomes the root
+            # future duplicates are checked against
+            repl = next(
+                (s for s in self.subs if s.canon_sig == sig), None
+            )
+            if repl is None:
+                del self._share_index[sig]
+            else:
+                self._share_index[sig] = repl
         if not self.subs:
             # no live lane maps reference the bank: reset it outright so a
             # later first subscription starts from a fresh, compact bank
-            self.bank = IncrementalPatternBank()
+            self.bank = self._new_bank()
             self._bank_version = -1
             self._batches.clear()
         else:
@@ -1362,6 +1527,17 @@ class Broker:
     def _ensure_bank_dev(self, dev: int | None = None) -> jax.Array:
         if self._bank_dev is None or self._bank_version != self.bank.version:
             self._bank_dev = jnp.asarray(self.bank.patterns_padded())
+            self._bank_real_dev = self._bank_dev
+            self._refine_dev = None
+            if isinstance(self.bank, SubsumptionBank):
+                ra = self.bank.refine_arrays()
+                if ra is not None:
+                    self._bank_real_dev = jnp.asarray(
+                        self.bank.real_padded()
+                    )
+                    self._refine_dev = (
+                        jnp.asarray(ra[0]), jnp.asarray(ra[1])
+                    )
             self._bank_version = self.bank.version
             self._bank_dev_for.clear()
         if dev is None:
@@ -1462,8 +1638,9 @@ class Broker:
         t0 = time.perf_counter()
         self._rejit_acc = 0.0
         self._rows_matched_acc = self._rows_distinct_acc = 0
+        self._distinct_acc = self._fanout_acc = 0
 
-        # layer 3: accumulate pending batches per consumption frontier
+        # layer 4: accumulate pending batches per consumption frontier
         for batch in self._batches.values():
             batch.extend(removed, added, cid)
         if cid not in self._batches and any(s.since == cid for s in self.subs):
@@ -1507,6 +1684,7 @@ class Broker:
         t0 = time.perf_counter()
         self._rejit_acc = 0.0
         self._rows_matched_acc = self._rows_distinct_acc = 0
+        self._distinct_acc = self._fanout_acc = 0
         fired = [k for k in targets if self.subs[k].since in self._batches]
         results, n_passes = self._fire(fired)
         self._sweep_batches(drained=bool(fired))
@@ -1693,9 +1871,17 @@ class Broker:
         if cached is not None:
             self._static_arrays_cache.move_to_end(key)
             return cached
+        if isinstance(self.bank, SubsumptionBank):
+            # encoded lane ids (virtual >= REFINE_BASE) -> dense extended
+            # row indices; the cache key's bank.version covers validity
+            lane_rows = [
+                self.bank.resolve_lanes(subs[k].lanes) for _, k in fk
+            ]
+        else:
+            lane_rows = [subs[k].lanes for _, k in fk]
         arrays = _assemble_cohort_statics(
             [subs[k].plan.patterns for _, k in fk],
-            [subs[k].lanes for _, k in fk],
+            lane_rows,
             [upos[k] for _, k in fk],
             f_list,
             ncp,
@@ -1760,6 +1946,15 @@ class Broker:
                         subs[k].recompile()
             bank_dev = self._ensure_bank_dev()
             n_words_p = bank_dev.shape[0] // 32
+            # deleted-side words inputs: when the subsumption bank holds
+            # virtual lanes, the words pass runs over the REAL rows only
+            # and lane_refine produces the virtual planes (parent word AND
+            # residual compare), concatenated after the real planes — the
+            # result reproduces the extended-bank word layout bit for bit,
+            # at residual cost instead of full bank width
+            bank_real = self._bank_real_dev
+            refine = self._refine_dev
+            n_words_r = bank_real.shape[0] // 32
 
             all_idx = [k for fr in fronts for k in fr.idxs]
             d_cap = max(subs[k].caps.n_removed for k in all_idx)
@@ -1812,41 +2007,83 @@ class Broker:
                 d_stores = [fr.d_store(d_cap) for fr in fronts]
             d_words_all = None
             if not sharded and chain is not None:
-                wkey = ("words-seg", u_cap, n_words_p, nfp, mkey)
-                miss = wkey not in self._exec_cache
-                words_fn = self._build_exec(
-                    wkey,
-                    lambda: jax.jit(
-                        lambda spo, seg, b: kops.pattern_bitmask_words_segmented(
-                            spo, b, seg, nfp, matcher=self.matcher
+                wkey = ("words-seg", u_cap, n_words_p, n_words_r, nfp, mkey)
+                if refine is None:
+                    def words_builder():
+                        return jax.jit(
+                            lambda spo, seg, b: (
+                                kops.pattern_bitmask_words_segmented(
+                                    spo, b, seg, nfp, matcher=self.matcher
+                                )
+                            )
                         )
-                    ),
-                    (chain.union.spo, chain.seg, bank_dev),
-                )
+
+                    wargs = (chain.union.spo, chain.seg, bank_real)
+                else:
+                    # refined planes inherit each frontier's membership
+                    # mask for free: a union row outside frontier f has
+                    # zero real bits, so its parent bit — and therefore
+                    # its refined bit — is already zero
+                    def words_builder():
+                        def f(spo, seg, b, par, res):
+                            w = kops.pattern_bitmask_words_segmented(
+                                spo, b, seg, nfp, matcher=self.matcher
+                            )
+                            wv = jax.vmap(
+                                lambda plane: kops.lane_refine(
+                                    spo, plane, par, res
+                                )
+                            )(w)
+                            return jnp.concatenate([w, wv], axis=-1)
+
+                        return jax.jit(f)
+
+                    wargs = (chain.union.spo, chain.seg, bank_real) + refine
+                miss = wkey not in self._exec_cache
+                words_fn = self._build_exec(wkey, words_builder, wargs)
                 if miss:
                     self.words_compiles += 1
                 # (nfp, u_cap, W) — frontier fi's words over the UNION rows
-                d_words_all = words_fn(chain.union.spo, chain.seg, bank_dev)
+                d_words_all = words_fn(*wargs)
             elif not sharded:
                 d_spos = tuple(st.spo for st in d_stores) + (
                     _empty_cached(d_cap).spo,
                 ) * (nfp - nf)
-                wkey = ("words", d_cap, n_words_p, nfp, mkey)
-                miss = wkey not in self._exec_cache
-                words_fn = self._build_exec(
-                    wkey,
-                    lambda: jax.jit(
-                        lambda spos, b: jax.vmap(
-                            lambda spo: kops.pattern_bitmask_words(
+                wkey = ("words", d_cap, n_words_p, n_words_r, nfp, mkey)
+                if refine is None:
+                    def words_builder():
+                        return jax.jit(
+                            lambda spos, b: jax.vmap(
+                                lambda spo: kops.pattern_bitmask_words(
+                                    spo, b, matcher=self.matcher
+                                )
+                            )(jnp.stack(spos))
+                        )
+
+                    wargs = (d_spos, bank_real)
+                else:
+                    def words_builder():
+                        def one(spo, b, par, res):
+                            w = kops.pattern_bitmask_words(
                                 spo, b, matcher=self.matcher
                             )
-                        )(jnp.stack(spos))
-                    ),
-                    (d_spos, bank_dev),
-                )
+                            return jnp.concatenate(
+                                [w, kops.lane_refine(spo, w, par, res)],
+                                axis=-1,
+                            )
+
+                        return jax.jit(
+                            lambda spos, b, par, res: jax.vmap(
+                                lambda spo: one(spo, b, par, res)
+                            )(jnp.stack(spos))
+                        )
+
+                    wargs = (d_spos, bank_real) + refine
+                miss = wkey not in self._exec_cache
+                words_fn = self._build_exec(wkey, words_builder, wargs)
                 if miss:
                     self.words_compiles += 1
-                d_words_all = words_fn(d_spos, bank_dev)  # (nfp, d_cap, W)
+                d_words_all = words_fn(*wargs)  # (nfp, d_cap, W)
 
             # per-frontier added sides, cached per cohort capacity
             a_cache: Dict[Tuple[int, int], TripleStore] = {}
@@ -1860,7 +2097,7 @@ class Broker:
             for fi, fr in enumerate(fronts):
                 for k in fr.idxs:
                     s = subs[k]
-                    key = (_plan_shape_key(s.plan), s.caps, s.id_capacity)
+                    key = (s.shape_key, s.caps, s.id_capacity)
                     cohorts.setdefault(key, []).append((fi, k))
 
             # placement: sticky cohort -> device assignment, calls grouped
@@ -1884,18 +2121,18 @@ class Broker:
             for (skey, caps, id_cap), fk in cohort_items:
                 dev = cohort_dev[(skey, caps, id_cap)]
                 device = self._devices[dev] if dev is not None else None
-                members = [k for _, k in fk]
-                rep = subs[members[0]]
+                rep = subs[fk[0][1]]
                 nt = rep.plan.n_total
                 # frontier slots this cohort actually uses -> dense local
                 # slots, so the padded frontier axis stays minimal
                 fs_used = sorted({fi for fi, _ in fk})
                 fslot = {fi: i for i, fi in enumerate(fs_used)}
-                f_list = [fslot[fi] for fi, _ in fk]
                 nfc = len(fs_used)
                 nfcp = next_pow2(nfc)
-                # unique target replicas (shared-τ groups) in this cohort
+                # unique target replicas (shared-τ lane groups) in this
+                # cohort; rep_fk holds each group's first (frontier, sub)
                 ugroups: List[List[int]] = []
+                rep_fk: List[Tuple[int, int]] = []
                 upos: Dict[int, int] = {}
                 seen: Dict[tuple, int] = {}
                 for fi, k in fk:
@@ -1904,10 +2141,33 @@ class Broker:
                     if gk not in seen:
                         seen[gk] = len(ugroups)
                         ugroups.append([])
+                        rep_fk.append((fi, k))
                     upos[k] = seen[gk]
                     ugroups[seen[gk]].append(k)
+                if self.subsume_interests:
+                    # lattice group collapse: ONE cohort slot per lane
+                    # group. Members of a group provably share plan
+                    # values, lanes, caps, τ, ρ, and frontier — that is
+                    # exactly what the (share_tag, epoch) lineage
+                    # certifies — so their slots would compute identical
+                    # results; the commit loop below fans the
+                    # representative's outputs out to every member, making
+                    # executable work a function of distinct interests and
+                    # delivery O(1) copies per interest.
+                    eval_fk = rep_fk
+                    eval_upos = {
+                        k: i for i, (_, k) in enumerate(rep_fk)
+                    }
+                else:
+                    eval_fk, eval_upos = fk, upos
+                members = [k for _, k in eval_fk]
+                f_list = [fslot[fi] for fi, _ in eval_fk]
                 nm, nu = len(members), len(ugroups)
                 ncp, nup = next_pow2(nm), next_pow2(nu)
+                self._distinct_acc += nm
+                self._fanout_acc += len(fk)
+                self.distinct_interests += nm
+                self.fanout_copies += len(fk)
 
                 d_sets = None
                 if chain is None:
@@ -1942,7 +2202,9 @@ class Broker:
                         )
                     (
                         f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
-                    ) = self._static_arrays(ckey, fk, f_list, upos, ncp, nt)
+                    ) = self._static_arrays(
+                        ckey, eval_fk, f_list, eval_upos, ncp, nt
+                    )
                     parts = [
                         self._tau_partitions(subs[g[0]], caps.tau)
                         for g in ugroups
@@ -2023,7 +2285,8 @@ class Broker:
                     (
                         f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
                     ) = self._static_arrays(
-                        ckey, fk, f_list, upos, ncp, nt, device=device
+                        ckey, eval_fk, f_list, eval_upos, ncp, nt,
+                        device=device,
                     )
                     args = (
                         chain.union,
@@ -2060,7 +2323,8 @@ class Broker:
                     (
                         f_map_d, tgt_map_d, pats_d, lanes_d, active_d,
                     ) = self._static_arrays(
-                        ckey, fk, f_list, upos, ncp, nt, device=device
+                        ckey, eval_fk, f_list, eval_upos, ncp, nt,
+                        device=device,
                     )
                     args = (
                         d_sets,
@@ -2138,9 +2402,14 @@ class Broker:
                     s.tau_version += 1
                 s.tau, s.rho = tau1, rho1
             if staged:
-                # block on every cohort's output so elapsed_s covers all work
+                # block on every cohort's output so elapsed_s covers all
+                # work; lane-group members alias one τ array, so block on
+                # each distinct array once, not per delivery
                 jax.block_until_ready(
-                    [tau1.spo for tau1, _ in staged.values()]
+                    list({
+                        id(tau1.spo): tau1.spo
+                        for tau1, _ in staged.values()
+                    }.values())
                 )
             return outs, n_passes
 
@@ -2156,17 +2425,28 @@ class Broker:
         n_passes: int,
         t0: float,
     ) -> None:
-        evaluated = [results[k] for k in fired]
+        # fanned-out deliveries share one EvalOutputs per lane group: fetch
+        # each distinct result once and weight by its member count, so stats
+        # stay O(distinct interests) host syncs per call
+        uniq: Dict[int, Tuple[EvalOutputs, int]] = {}
+        for k in fired:
+            o = results[k]
+            ent = uniq.get(id(o))
+            uniq[id(o)] = (o, 1 if ent is None else ent[1] + 1)
         self.stats.append(
             BrokerStats(
                 changeset_id=changeset_id,
                 n_subscribers=len(self.subs),
                 n_lanes=self.bank.n_lanes,
-                n_lanes_raw=sum(s.plan.n_total for s in self.subs),
+                n_lanes_raw=self._lanes_raw,
                 total_removed=int(removed.shape[0]),
                 total_added=int(added.shape[0]),
-                interesting_removed=sum(int(o.r.n) for o in evaluated),
-                interesting_added=sum(int(o.a.n) for o in evaluated),
+                interesting_removed=sum(
+                    int(o.r.n) * c for o, c in uniq.values()
+                ),
+                interesting_added=sum(
+                    int(o.a.n) * c for o, c in uniq.values()
+                ),
                 elapsed_s=time.perf_counter() - t0,
                 rejit_s=self._rejit_acc,
                 n_evaluated=len(fired),
@@ -2176,5 +2456,7 @@ class Broker:
                 batch_shrinks=self.batch_shrinks,
                 rows_matched=self._rows_matched_acc,
                 rows_distinct=self._rows_distinct_acc,
+                distinct_interests=self._distinct_acc,
+                fanout_copies=self._fanout_acc,
             )
         )

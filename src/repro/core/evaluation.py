@@ -222,6 +222,17 @@ def make_side_evaluator(
     ``table_reduce`` sees boolean signature tables in both modes and must
     batch under ``jax.vmap`` when the cohort path is in play
     (``distributed.make_or_reduce`` does).
+
+    **Refined-lane contract (subsumption lattice).** The evaluator never
+    inspects how its per-row lane bits were produced: the broker may hand
+    it bits from a *virtual* bank lane — a parent row's word ANDed with a
+    residual predicate by ``kernels.ops.lane_refine`` instead of a
+    materialized bank row. That substitution is sound only under the
+    invariant ``interest.SubsumptionBank`` maintains: the residual binds
+    exactly the slots where the parent row has a variable, so
+    ``parent AND residual`` equals the bits a materialized child row
+    would produce, and everything downstream (candidate extraction,
+    probes, output construction) is bit-identical by construction.
     """
     matcher = matcher or kops.pattern_bitmask
     probe_dyn_impl = (probe_impl or probe_dyn) if dynamic_patterns else None

@@ -154,6 +154,46 @@ def pattern_bitmask_words_segmented(
     return jnp.swapaxes(out, 1, 2)[:, :n]
 
 
+def lane_refine(
+    spo: jax.Array,
+    words: jax.Array,
+    parents: jax.Array,
+    residual: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """uint32[N, Wv] virtual-lane words refined from real-bank words.
+
+    The interest-subsumption lattice's containment op: virtual lane ``v``
+    holds a pattern strictly contained by real bank lane ``parents[v]``
+    (child ≡ parent AND ``residual[v]``, the child's constants in exactly
+    the slots the parent leaves variable). Instead of widening the bank and
+    re-running the full compare loop, the child's words are the parent's
+    already-computed bit (gathered out of ``words``: uint32[N, W] from
+    :func:`pattern_bitmask_words` over the same ``spo``) ANDed with the
+    three-term residual compare — bit-identical to what
+    :func:`pattern_bitmask_words` would emit for the materialized child
+    patterns. ``parents[v] == -1`` marks a dead slot (bits forced to zero);
+    ``Wv = ceil(len(parents) / 32)``, min 1.
+    """
+    if parents.shape[0] == 0 or not _want_kernel(use_kernel):
+        return ref.lane_refine_ref(spo, words, parents, residual)
+    tile = 128 * triple_match.BLOCK_ROWS
+    n = spo.shape[0]
+    n_pad = -n % tile
+    if n_pad:
+        spo = jnp.concatenate(
+            [spo, jnp.full((n_pad, 3), PAD, dtype=jnp.int32)], axis=0
+        )
+        words = jnp.concatenate(
+            [words, jnp.zeros((n_pad, words.shape[1]), jnp.uint32)], axis=0
+        )
+    out = triple_match.lane_refine_pallas(
+        spo, words, parents, residual, interpret=not _on_tpu()
+    )
+    return out.T[:n]
+
+
 def pattern_lane_bits_batched(
     spo_b: jax.Array,
     patterns: jax.Array,

@@ -110,6 +110,52 @@ def pattern_lane_bits_ref(
     return out
 
 
+def lane_refine_ref(
+    spo: jax.Array,
+    words: jax.Array,
+    parents: jax.Array,
+    residual: jax.Array,
+) -> jax.Array:
+    """uint32[N, Wv] refined virtual-lane words (the containment-DAG op).
+
+    ``words``: uint32[N, W] real-bank words (:func:`pattern_bitmask_words_ref`
+    output); ``parents``: int32[Vp] parent bank lane per virtual slot (-1 =
+    dead slot, bits forced to zero); ``residual``: int32[Vp, 3] with the
+    child's constants in exactly the slots the parent leaves variable
+    (WILDCARD elsewhere). Output word ``w`` bit ``b`` carries virtual slot
+    ``v = 32w + b``: the parent lane's match bit ANDed with the residual
+    equality predicate — bit-identical to what
+    :func:`pattern_bitmask_words_ref` would emit for the materialized child
+    rows (child ≡ parent AND residual), at residual-compare cost instead of
+    a full bank-width pass. Oracle for
+    :func:`repro.kernels.triple_match.lane_refine_pallas` and the XLA
+    fallback.
+    """
+    n = spo.shape[0]
+    vp = parents.shape[0]
+    n_out = max(1, -(-vp // 32))
+    if vp == 0:
+        return jnp.zeros((n, n_out), jnp.uint32)
+    live = parents >= 0
+    p_safe = jnp.maximum(parents, 0)
+    g = jnp.take(words, p_safe // 32, axis=1)  # (N, Vp)
+    pbit = (g >> (p_safe % 32).astype(jnp.uint32)[None, :]) & jnp.uint32(1)
+    m = live[None, :]
+    for k in range(3):
+        rk = residual[:, k][None, :]
+        m = m & ((rk == WILDCARD) | (spo[:, k][:, None] == rk))
+    m = m & (pbit == jnp.uint32(1))
+    pad_v = n_out * 32 - vp
+    if pad_v:
+        m = jnp.concatenate([m, jnp.zeros((n, pad_v), bool)], axis=1)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        m.reshape(n, n_out, 32).astype(jnp.uint32) * weights[None, None, :],
+        axis=-1,
+        dtype=jnp.uint32,
+    )
+
+
 def _lex_less(a: jax.Array, b: jax.Array) -> jax.Array:
     s_lt = a[..., 0] < b[..., 0]
     s_eq = a[..., 0] == b[..., 0]

@@ -20,6 +20,11 @@ pattern-compare loop (:func:`_match_words`):
   frontier chain feeds it the distinct-row union of overlapping flush
   frontiers, so ``F`` frontiers cost ONE pass over the union instead of one
   stacked pass per frontier, uint32[F, W, N] out.
+* :func:`lane_refine_pallas` — the interest-subsumption lattice's
+  containment op: a *virtual* bank lane whose pattern is strictly contained
+  by a real lane's pattern (constant where the parent has a variable) never
+  occupies bank width — its words are the parent's already-emitted words
+  ANDed with the cheap residual-constant compare, uint32[Wv, N] out.
 * :func:`triple_match_lanes_pallas` — the broker's fully fused cohort path:
   multi-word emit PLUS bitset-lane routing PLUS the member (padding-lane)
   mask in one kernel. Each cohort member's triple tile is matched against
@@ -262,6 +267,106 @@ def triple_match_words_segmented_pallas(
         interpret=interpret,
     )(patterns, g2, s2, p2, o2)
     return out.reshape(n_seg, n_words, n)
+
+
+def _kernel_refine(
+    par_ref,
+    res_ref,
+    w_ref,
+    s_ref,
+    p_ref,
+    o_ref,
+    out_ref,
+    *,
+    n_virt: int,
+    n_words_in: int,
+):
+    """Containment-DAG refinement: parent word bit AND residual compare.
+
+    Virtual slot ``v`` gathers its parent bank lane's bit out of the
+    already-computed real-bank words (lane values are traced, so the word
+    choice is a select chain over the ``n_words_in`` input planes) and ANDs
+    the child's residual constant compares — the three-term predicate the
+    parent left unconstrained. Dead slots (parent -1) are forced to zero.
+    PAD rows need no extra mask: the parent bit is already zero for them.
+    """
+    s = s_ref[...]
+    p = p_ref[...]
+    o = o_ref[...]
+    n_out = max(1, -(-n_virt // 32))
+    for wo in range(n_out):
+        acc = jnp.zeros(s.shape, dtype=jnp.uint32)
+        for v in range(wo * 32, min(n_virt, wo * 32 + 32)):
+            par = par_ref[v, 0]
+            wi = par // 32
+            sh = (par % 32).astype(jnp.uint32)
+            word = w_ref[0]
+            for w in range(1, n_words_in):
+                word = jnp.where(wi == w, w_ref[w], word)
+            pbit = (word >> sh) & jnp.uint32(1)
+            rs = res_ref[v, 0]
+            rp = res_ref[v, 1]
+            ro = res_ref[v, 2]
+            m = (
+                (pbit == jnp.uint32(1))
+                & (par >= 0)
+                & ((rs == WILDCARD) | (s == rs))
+                & ((rp == WILDCARD) | (p == rp))
+                & ((ro == WILDCARD) | (o == ro))
+            )
+            acc = acc | (m.astype(jnp.uint32) << (v - wo * 32))
+        out_ref[wo] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lane_refine_pallas(
+    spo: jax.Array,
+    words: jax.Array,
+    parents: jax.Array,
+    residual: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """uint32[Wv, N] refined virtual-lane words from real-bank words.
+
+    ``words``: uint32[N, W] real-bank planes (PAD rows must already be
+    zero, as :func:`triple_match_words_pallas` guarantees); ``parents``:
+    int32[Vp] parent bank lane per virtual slot (-1 = dead); ``residual``:
+    int32[Vp, 3] child constants in the parent's variable slots (WILDCARD
+    elsewhere). Bit-identical to matching the materialized child patterns
+    with the words kernel, at residual-compare cost — no bank-width pass.
+    ``Wv = ceil(Vp / 32)``; N must be a multiple of 128 * BLOCK_ROWS.
+    """
+    n = spo.shape[0]
+    vp = parents.shape[0]
+    n_words_in = words.shape[1]
+    n_out = max(1, -(-vp // 32))
+    assert n % (128 * BLOCK_ROWS) == 0, n
+    rows = n // 128
+    s2 = spo[:, 0].reshape(rows, 128)
+    p2 = spo[:, 1].reshape(rows, 128)
+    o2 = spo[:, 2].reshape(rows, 128)
+    w2 = words.T.reshape(n_words_in, rows, 128)
+    par2 = parents.reshape(vp, 1)
+
+    grid = (rows // BLOCK_ROWS,)
+    col_spec = pl.BlockSpec((BLOCK_ROWS, 128), lambda i: (i, 0))
+    par_spec = pl.BlockSpec((vp, 1), lambda i: (0, 0))
+    res_spec = pl.BlockSpec((vp, 3), lambda i: (0, 0))
+    w_spec = pl.BlockSpec((n_words_in, BLOCK_ROWS, 128), lambda i: (0, i, 0))
+    out_spec = pl.BlockSpec((n_out, BLOCK_ROWS, 128), lambda i: (0, i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel_refine, n_virt=vp, n_words_in=n_words_in
+        ),
+        grid=grid,
+        in_specs=[par_spec, res_spec, w_spec, col_spec, col_spec, col_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(par2, residual, w2, s2, p2, o2)
+    return out.reshape(n_out, n)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -207,11 +207,32 @@ def test_shared_target_single_index_build(universe):
         assert_outputs_identical(outs[0], want, "shared twin")
     assert broker.subs[0].tau is broker.subs[1].tau
     assert_state_matches(s2, ref, "shared twin state")
-    # the cohort executable was specialized to fewer unique targets than
-    # members: (ncp, nup) == (2, 1)
+    # the subsumption lattice (default) collapses the identical twins into
+    # ONE cohort slot: (ncp, nup) == (1, 1)
+    assert any(
+        k[4] == 1 and k[5] == 1
+        for k in broker.cohort_compiles
+        if k[0] == "cohort"
+    )
+
+    # lattice off: both members get slots but still share one unique
+    # target replica — the executable specializes to (ncp, nup) == (2, 1)
+    # and build_index(τ) runs once for the pair
+    broker_off = Broker(d, subsume_interests=False)
+    b1 = broker_off.subscribe(expr, CAPS, initial_target=tau0)
+    b2 = broker_off.subscribe(expr, CAPS, share_target=True)
+    assert b2.tau is b1.tau
+    ref_off = IrapEngine(d).register_interest(
+        expr, CAPS, initial_target=tau0
+    )
+    for cs in changesets:
+        outs = broker_off.process_changeset(*cs)
+        want = ref_off.apply(*cs)
+        assert_outputs_identical(outs[0], want, "shared twin (lattice off)")
+        assert_outputs_identical(outs[1], want, "shared twin (lattice off)")
     assert any(
         k[4] == 2 and k[5] == 1
-        for k in broker.cohort_compiles
+        for k in broker_off.cohort_compiles
         if k[0] == "cohort"
     )
 

@@ -309,3 +309,133 @@ def test_bank_lane_maps_recover_plan_patterns(combo):
     # dedup never invents patterns: every lane is used by some plan
     used = {lane for lanes in bank.lanes for lane in lanes}
     assert used == set(range(bank.n_lanes))
+
+
+# ---------------------------------------------------------------------------
+# subsumption lattice: distinct-interest evaluation + fanout is invisible.
+# Random pools with duplicates and containment, plus subscribe/unsubscribe/
+# re-subscribe churn: lattice-on == lattice-off == per-interest seed step,
+# bit-identical at every fire.
+# ---------------------------------------------------------------------------
+
+from repro.core import Broker, to_numpy
+from repro.core.interest import canonicalize_expr
+
+LATT_DICT = Dictionary()
+for _t in (
+    ["type", "goals", "rank", "Athlete", "Team"]
+    + [f"e{i}" for i in range(6)]
+    + [f"o{i}" for i in range(4)]
+):
+    LATT_DICT.encode_term(_t)
+LATT_CAPS = StepCapacities(
+    n_removed=6, n_added=6, tau=64, rho=32, pulls=64, fanout=4
+)
+# pool with exact duplicates (0/2), a renaming (0/5), containment (1 and 4
+# under 0), and a star reorder (3/6)
+_LATT_POOL = [
+    InterestExpr.parse("g", "t", bgp=[("?a", "goals", "?v")]),
+    InterestExpr.parse("g", "t", bgp=[("e0", "goals", "?v")]),
+    InterestExpr.parse("g", "t", bgp=[("?a", "goals", "?v")]),
+    InterestExpr.parse(
+        "g", "t", bgp=[("?a", "type", "Athlete"), ("?a", "goals", "?v")]
+    ),
+    InterestExpr.parse("g", "t", bgp=[("e1", "goals", "?v")]),
+    InterestExpr.parse("g", "t", bgp=[("?z", "goals", "?w")]),
+    InterestExpr.parse(
+        "g", "t", bgp=[("?q", "goals", "?r"), ("?q", "type", "Athlete")]
+    ),
+]
+_LATT_ID_CAP = LATT_DICT.id_capacity * LATT_CAPS.id_headroom
+_LATT_STEPS = [
+    make_interest_step(
+        compile_interest(canonicalize_expr(e)[0], LATT_DICT),
+        id_capacity=_LATT_ID_CAP,
+        caps=LATT_CAPS,
+    )
+    for e in _LATT_POOL
+]
+LATT_EXEC_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+
+_LATT_SUBJ = [LATT_DICT.lookup(f"e{i}") for i in range(6)]
+_LATT_PRED = [LATT_DICT.lookup(x) for x in ("type", "goals", "rank")]
+_LATT_OBJ = [LATT_DICT.lookup(x) for x in ("Athlete", "Team", "o0", "o1")]
+
+
+def _latt_rows(draw, max_size):
+    tris = draw(
+        st.sets(
+            st.tuples(
+                st.sampled_from(_LATT_SUBJ),
+                st.sampled_from(_LATT_PRED),
+                st.sampled_from(_LATT_OBJ),
+            ),
+            max_size=max_size,
+        )
+    )
+    return np_rows(tris)
+
+
+def _latt_outs(o):
+    if o is None:
+        return None
+    return tuple(
+        to_numpy(getattr(o, f)) for f in ("r", "r_i", "r_prime", "a", "a_i")
+    )
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lattice_collapse_is_invisible_under_churn(data):
+    """Lattice-on == lattice-off == seed oracle through random churn."""
+    b_on = Broker(LATT_DICT, subsume_interests=True)
+    b_off = Broker(LATT_DICT, subsume_interests=False)
+    b_on._exec_cache = LATT_EXEC_CACHE
+    b_off._exec_cache = LATT_EXEC_CACHE
+    live = []  # (pool index, sub_on, sub_off, seed tau, seed rho)
+    plan = data.draw(st.lists(st.sampled_from("SSUC"), min_size=2, max_size=7))
+    for op in plan:
+        if op == "U" and live:
+            _, s_on, s_off, _, _ = live.pop(
+                data.draw(st.integers(0, len(live) - 1))
+            )
+            b_on.unsubscribe(s_on)
+            b_off.unsubscribe(s_off)
+        elif op != "C" or not live:
+            # subscribing >1 at a time lets fresh duplicates auto-join a
+            # lane group (a changeset in between desyncs their frontiers,
+            # which must — and does — keep them independent instead)
+            for _ in range(data.draw(st.integers(1, 2))):
+                i = data.draw(st.integers(0, len(_LATT_POOL) - 1))
+                live.append((
+                    i,
+                    b_on.subscribe(_LATT_POOL[i], LATT_CAPS),
+                    b_off.subscribe(_LATT_POOL[i], LATT_CAPS),
+                    from_numpy(np.zeros((0, 3), np.int32), LATT_CAPS.tau),
+                    from_numpy(np.zeros((0, 3), np.int32), LATT_CAPS.rho),
+                ))
+        rm = _latt_rows(data.draw, 4)
+        ad = _latt_rows(data.draw, 5)
+        outs_on = [_latt_outs(o) for o in b_on.process_changeset(rm, ad)]
+        outs_off = [_latt_outs(o) for o in b_off.process_changeset(rm, ad)]
+        assert len(outs_on) == len(outs_off) == len(live)
+        d_store = from_numpy(rm, LATT_CAPS.n_removed)
+        a_store = from_numpy(ad, LATT_CAPS.n_added)
+        for k, (i, s_on, s_off, tau, rho) in enumerate(live):
+            tau, rho, want = _LATT_STEPS[i](d_store, a_store, tau, rho)
+            live[k] = (i, s_on, s_off, tau, rho)
+            seed = _latt_outs(want)
+            assert (outs_on[k] is None) == (outs_off[k] is None)
+            if outs_on[k] is None:
+                continue
+            for f, (x, y, z) in enumerate(
+                zip(outs_on[k], outs_off[k], seed)
+            ):
+                np.testing.assert_array_equal(x, y, err_msg=f"on/off {k}/{f}")
+                np.testing.assert_array_equal(x, z, err_msg=f"on/seed {k}/{f}")
+    # lattice-off never evaluates fewer slots than subscribers; lattice-on
+    # never evaluates more than lattice-off
+    assert b_off.distinct_interests == b_off.fanout_copies
+    assert b_on.distinct_interests <= b_off.distinct_interests
+    assert b_on.fanout_copies == b_off.fanout_copies
