@@ -1,0 +1,229 @@
+"""Durability tier cost: WAL journal overhead + snapshot-aided recovery.
+
+The journal (``core/journal.py``) write-ahead-logs every ingest before any
+batch sees it, and every committed fire's frontier advances after delivery
+— so its cost lands on the broker's hot ingest/fire path. This benchmark
+prices that, and the recovery path the journal exists for:
+
+  * **ingest+fire throughput** — the same eager+deferred workload through
+    three brokers: ``journal=None`` (baseline), a journal with
+    ``fsync=False`` (framing/serialization cost only), and one with
+    ``fsync=True`` (the durable default: one fsync per appended record).
+    Before timing, a parity round asserts the journaled broker's outputs
+    and final τ state bit-identical to the baseline's — the unified
+    sequence clock means attaching a journal must not change a single id.
+  * **recovery time vs tail length** — ``Broker.recover`` from the full
+    journal (no snapshot: replay every record, re-evaluating every fire)
+    vs from a snapshot taken at ~¾ of the stream (replay only the tail).
+    The gap is what ``Broker.snapshot`` + ``compact_journal`` buy a
+    long-running daemon.
+
+Reported: wall seconds per changeset for each journal mode (compile time
+excluded via ``BrokerStats.rejit_s``), journal overhead ratios, journal
+size on disk, and recovery seconds with/without snapshot. Emits
+``experiments/bench/BENCH_journal.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only journal
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core import (
+    Broker,
+    ChangesetJournal,
+    Dictionary,
+    InterestExpr,
+    PushPolicy,
+    StepCapacities,
+)
+from repro.core.triples import to_numpy
+
+from .common import csv_row, save_json
+
+N_POOL = 48
+
+
+def _interest(i: int) -> InterestExpr:
+    return InterestExpr.parse(
+        source="synthetic://journal",
+        target=f"local://sub{i}",
+        bgp=[("?a", "rdf:type", f"cls{i}"), ("?a", f"p{i}", "?v")],
+    )
+
+
+def _caps() -> StepCapacities:
+    return StepCapacities(
+        n_removed=256, n_added=256, tau=1024, rho=256, pulls=128, fanout=2
+    )
+
+
+def _stream(
+    d: Dictionary, n: int, d_rows: int = 24, a_rows: int = 48, seed: int = 0
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+
+    def rows(k):
+        out = []
+        for _ in range(k):
+            e = f"e{rng.integers(0, N_POOL)}"
+            kind = rng.integers(0, 3)
+            if kind == 0:
+                out.append((e, "rdf:type", f"cls{rng.integers(0, 8)}"))
+            elif kind == 1:
+                out.append((e, f"p{rng.integers(0, 8)}", f"o{rng.integers(0, 9)}"))
+            else:
+                out.append((e, f"noise{rng.integers(0, 4)}", f"o{rng.integers(0, 9)}"))
+        return d.encode_triples(out)
+
+    return [(rows(d_rows), rows(a_rows)) for _ in range(n)]
+
+
+def _build(journal, n_subs: int):
+    d = Dictionary()
+    broker = Broker(d, journal=journal)
+    for i in range(n_subs):
+        # half eager (fire every changeset -> one fire record each), half
+        # every-4 (composed windows -> pending batches in the journal replay)
+        policy = PushPolicy() if i % 2 == 0 else PushPolicy.every(4)
+        broker.subscribe(_interest(i), _caps(), policy=policy)
+    return d, broker
+
+
+def _drive(broker, stream) -> Tuple[float, list]:
+    outs = []
+    t0 = time.perf_counter()
+    n_stats = len(broker.stats)
+    for rm, ad in stream:
+        outs.append(broker.process_changeset(rm, ad))
+    outs.append(broker.flush())
+    elapsed = time.perf_counter() - t0
+    rejit = sum(st.rejit_s for st in broker.stats[n_stats:])
+    return elapsed - rejit, outs
+
+
+def _assert_parity(got, want, label):
+    assert len(got) == len(want), label
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert len(g) == len(w), (label, i)
+        for k, (a, b) in enumerate(zip(g, w)):
+            assert (a is None) == (b is None), (label, i, k)
+            if a is None:
+                continue
+            for field in ("r", "r_i", "r_prime", "a", "a_i"):
+                if not np.array_equal(
+                    np.asarray(getattr(a, field).spo),
+                    np.asarray(getattr(b, field).spo),
+                ):
+                    raise AssertionError(
+                        f"journaled outputs diverge: {label}/{i}/{k}/{field}"
+                    )
+
+
+def _dir_bytes(path: Path) -> int:
+    return sum(p.stat().st_size for p in Path(path).glob("wal_*.seg"))
+
+
+def run(scale: float = 1.0, n_subs: int = 6, n_steps: int = 24) -> str:
+    n_steps = max(8, int(n_steps * scale))
+    tmp = Path(tempfile.mkdtemp(prefix="bench_journal_"))
+    try:
+        warm = 4
+        configs = {
+            "off": None,
+            "nosync": ChangesetJournal(tmp / "nosync", fsync=False),
+            "fsync": ChangesetJournal(tmp / "fsync", fsync=True),
+        }
+        brokers, streams, outs, times = {}, {}, {}, {}
+        for name, journal in configs.items():
+            d, broker = _build(journal, n_subs)
+            stream = _stream(d, warm + n_steps, seed=0)
+            # warm: hit every executable/static cache before timing
+            _, warm_outs = _drive(broker, stream[:warm])
+            times[name], timed_outs = _drive(broker, stream[warm:])
+            outs[name] = warm_outs + timed_outs
+            brokers[name] = (d, broker)
+
+        # parity: attaching a journal changes no output and no final state
+        for name in ("nosync", "fsync"):
+            _assert_parity(outs[name], outs["off"], name)
+            for s_j, s_0 in zip(brokers[name][1].subs, brokers["off"][1].subs):
+                assert s_j.since == s_0.since
+                if not np.array_equal(
+                    to_numpy(s_j.tau), to_numpy(s_0.tau)
+                ):
+                    raise AssertionError(f"final tau diverges: {name}")
+
+        # recovery: full-journal replay vs snapshot + tail replay
+        d_j, broker_j = brokers["nosync"]
+        journal = broker_j.journal
+        journal.sync()
+        t0 = time.perf_counter()
+        r_full = Broker.recover(
+            ChangesetJournal(tmp / "nosync", fsync=False), dictionary=d_j
+        )
+        recover_full_s = time.perf_counter() - t0
+        assert r_full._seq == broker_j._seq
+
+        # snapshot near the head of a fresh tail: keep streaming, snapshot,
+        # stream the last quarter, then recover (tail = quarter of the run)
+        d2, broker2 = _build(
+            ChangesetJournal(tmp / "snap", fsync=False), n_subs
+        )
+        stream2 = _stream(d2, warm + n_steps, seed=0)
+        split = warm + (3 * n_steps) // 4
+        _drive(broker2, stream2[:split])
+        store = CheckpointStore(tmp / "ckpt")
+        broker2.snapshot(store)
+        broker2.compact_journal()
+        _drive(broker2, stream2[split:])
+        broker2.journal.sync()
+        t0 = time.perf_counter()
+        r_snap = Broker.recover(
+            ChangesetJournal(tmp / "snap", fsync=False),
+            store,
+            dictionary=d2,
+        )
+        recover_snap_s = time.perf_counter() - t0
+        assert r_snap._seq == broker2._seq
+
+        per_cs = {k: v / n_steps for k, v in times.items()}
+        overhead = {
+            k: per_cs[k] / max(1e-9, per_cs["off"]) for k in ("nosync", "fsync")
+        }
+        payload = {
+            "n_changesets": n_steps,
+            "n_subscribers": n_subs,
+            "ingest_fire_s_per_changeset": per_cs,
+            "journal_overhead_ratio": overhead,
+            "journal_bytes": {
+                "nosync": _dir_bytes(tmp / "nosync"),
+                "fsync": _dir_bytes(tmp / "fsync"),
+            },
+            "recover_full_replay_s": recover_full_s,
+            "recover_snapshot_tail_s": recover_snap_s,
+            "recover_snapshot_speedup": recover_full_s
+            / max(1e-9, recover_snap_s),
+            "parity": {
+                "outputs_and_final_state_vs_journal_off": True,
+                "recovered_seq_matches": True,
+            },
+            "scale": scale,
+        }
+        save_json("BENCH_journal", payload)
+        us = per_cs["fsync"] * 1e6
+        return csv_row(
+            "broker_journal",
+            us,
+            f"fsync_x={overhead['fsync']:.2f};nosync_x={overhead['nosync']:.2f};"
+            f"recover {recover_full_s:.1f}s-full/{recover_snap_s:.1f}s-snap",
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

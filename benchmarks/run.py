@@ -21,7 +21,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import broker_churn, broker_fanout, broker_flush
-    from . import broker_scaling, broker_shard
+    from . import broker_journal, broker_scaling, broker_shard
     from . import fig4_growth, kernels_micro
     from . import table1_changesets
     from . import table23_interest_eval as t23
@@ -38,6 +38,7 @@ def main() -> None:
         "broker_flush": lambda: broker_flush.run(args.scale),
         "broker_fanout": lambda: broker_fanout.run(args.scale),
         "broker_shard": lambda: broker_shard.run(args.scale),
+        "broker_journal": lambda: broker_journal.run(args.scale),
     }
     print("name,us_per_call,derived")
     failures = []

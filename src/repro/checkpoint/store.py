@@ -75,11 +75,29 @@ class CheckpointStore:
             shutil.rmtree(old)
 
     # ------------------------------------------------------------------
+    def steps(self) -> list:
+        """All complete snapshot steps, ascending."""
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+        )
+
     def latest_step(self) -> Optional[int]:
-        steps = sorted(self.dir.glob("step_*"))
-        if not steps:
-            return None
-        return int(steps[-1].name.split("_")[1])
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def load_raw(
+        self, step: int
+    ) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """One snapshot's flat arrays + extra metadata, no template needed.
+
+        The template-free read path (broker recovery): the caller rebuilds
+        its own structure from the manifest ``extra`` and the flat
+        ``name/key`` array entries.
+        """
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "arrays.npz")
+        return {k: data[k] for k in data.files}, manifest.get("extra", {})
 
     def restore(
         self,

@@ -6,6 +6,7 @@ Public API:
   make_side_evaluator / TripleIndex          (repro.core.evaluation)
   make_interest_step / IrapEngine            (repro.core.propagation)
   Broker / make_broker_step                  (repro.core.broker)
+  ChangesetJournal / DeliveryChannel         (repro.core.{journal,delivery})
 """
 from .broker import (
     Broker,
@@ -16,8 +17,10 @@ from .broker import (
     make_cohort_step,
     make_sharded_cohort_step,
 )
+from .delivery import DeliveryChannel, DeliveryStats
 from .dictionary import Dictionary, parse_triples
 from .distributed import CohortPlacement
+from .journal import ChangesetJournal, JournalRecord
 from .interest import (
     CompiledInterest,
     IncrementalPatternBank,
@@ -61,6 +64,10 @@ __all__ = [
     "make_broker_step",
     "make_cohort_step",
     "make_sharded_cohort_step",
+    "ChangesetJournal",
+    "JournalRecord",
+    "DeliveryChannel",
+    "DeliveryStats",
     "CohortPlacement",
     "Dictionary",
     "parse_triples",

@@ -128,6 +128,52 @@ The broker is four layers, plus a distribution layer over them:
    per-frontier composed batches remain the delivery windows — the natural
    cross-host boundary.
 
+6. **Durability + delivery robustness** (both opt-in; a broker without a
+   journal or channel behaves exactly as before, on the same unified
+   sequence clock). Attaching a :class:`~repro.core.journal.ChangesetJournal`
+   (``Broker(journal=...)`` or ``broker.journal = ...``) write-ahead-logs
+   every state-changing event on one monotonic sequence: ``subscribe`` /
+   ``unsubscribe`` records carry the call's arguments, ``ingest`` records
+   carry the raw changeset arrays (appended *before* the batches extend),
+   and a ``fire`` record carries the acked ``{subscriber: new frontier}``
+   advances — appended after delivery but *before* the in-memory commit,
+   so the journal's durable prefix is always a consistent boundary.
+   :meth:`Broker.snapshot` checkpoints full subscriber state (τ/ρ valid
+   rows, caps, policy, frontier) through the
+   :class:`~repro.checkpoint.store.CheckpointStore` atomic tmp-dir+rename
+   discipline keyed by journal seq, and :meth:`Broker.recover` rebuilds a
+   bit-identical broker by snapshot-plus-tail-replay (replayed ingests
+   rebuild composed batches; replayed fires re-evaluate exactly the
+   recorded subscribers with delivery suppressed).
+
+   **The durability/exactly-once contract.** Recovery gives at-least-once
+   fire semantics: a crash between delivery and the ``fire`` record means
+   the frontier never durably advanced, so the next fire re-delivers —
+   but always as the *composed* window ``C[f..j]`` re-extended to
+   ``C[f..j']``. Definition 6 composition makes that idempotent for the
+   receiver: for set-semantic changesets, ``apply(apply(τ, X), X∘Y) ==
+   apply(apply(τ, X), Y)`` — the composed delta's D side re-deletes rows
+   already gone and its A side re-adds rows already present — so a replica
+   that applies every delivered composed window converges to exactly-once
+   *state* regardless of redelivery. This is why the journal only needs
+   ingest WAL + acked-frontier records, never delivered payloads.
+
+   A :class:`~repro.core.delivery.DeliveryChannel` (``Broker(channel=...)``)
+   adds the failure-handling tier at the same commit point: per-subscriber
+   retry with exponential backoff + jitter + timeout, a bounded in-flight
+   retry queue that backpressures :meth:`process_changeset`, and poison
+   quarantine — a subscriber failing N consecutive deliveries stops firing
+   (its frontier pins, its batch keeps composing) instead of stalling the
+   broker. Delivery happens before commit, so a failed delivery needs no
+   rollback: the subscriber is simply not committed. Channel state (retry
+   counts, quarantine) is deliberately *not* durable — after recovery every
+   subscriber starts unpinned and re-earns its quarantine. Finally, the
+   capacity-overflow retry loop gains a bounded ceiling
+   (``max_fire_retries``): past it, the affected subscribers are evaluated
+   through the per-interest seed path (bit-identical by the oracle
+   discipline, just slower) and ``BrokerStats.degraded_fires`` records the
+   degradation instead of the fire doubling capacities without limit.
+
 Downstream of the bitmask every subscriber runs the *same* traced
 computation as the single-interest path — the side evaluators of
 :mod:`repro.core.evaluation` (π / π', Definitions 11-12) with precomputed
@@ -194,12 +240,14 @@ from .interest import (
     compile_interest,
     next_pow2,
 )
+from .journal import ChangesetJournal
 from .propagation import (
     ChangesetBatch,
     EvalOutputs,
     StepCapacities,
     build_frontier_chain,
     combine_side_results,
+    make_interest_step,
 )
 from .triples import (
     PAD,
@@ -230,6 +278,43 @@ def _plan_shape_key(plan: CompiledInterest):
         plan.n_children,
         const_mask,
     )
+
+
+# ---------------------------------------------------------------------------
+# durability: journal/snapshot (de)serialization of subscription arguments
+# ---------------------------------------------------------------------------
+
+def _expr_to_json(expr: InterestExpr) -> dict:
+    return {
+        "source": expr.source,
+        "target": expr.target,
+        "bgp": [list(p.slots()) for p in expr.bgp],
+        "ogp": [list(p.slots()) for p in expr.ogp],
+    }
+
+
+def _expr_from_json(d: dict) -> InterestExpr:
+    return InterestExpr.parse(
+        d["source"], d["target"],
+        bgp=[tuple(p) for p in d["bgp"]],
+        ogp=[tuple(p) for p in d.get("ogp", [])],
+    )
+
+
+def _caps_to_json(caps: StepCapacities) -> dict:
+    return dataclasses.asdict(caps)
+
+
+def _caps_from_json(d: dict) -> StepCapacities:
+    return StepCapacities(**d)
+
+
+def _policy_to_json(policy: "PushPolicy | None") -> dict | None:
+    return None if policy is None else dataclasses.asdict(policy)
+
+
+def _policy_from_json(d: dict | None) -> "PushPolicy | None":
+    return None if d is None else PushPolicy(**d)
 
 
 # ---------------------------------------------------------------------------
@@ -1105,6 +1190,12 @@ class BrokerSubscription:
         # — the broker's automatic exact-duplicate collapse index; None when
         # the lattice is off
         self.canon_sig: Optional[tuple] = None
+        # durable identity: broker-assigned, journaled, stable across
+        # recovery (unlike `serial`, which is process-local)
+        self.jid: int = -1
+        # per-subscriber delivery callback (overrides the channel default);
+        # ephemeral — not journaled, re-attach after recover()
+        self.transport: Optional[Callable] = None
 
     def recompile(self, caps: StepCapacities | None = None) -> None:
         """Refresh plan/capacities after dictionary or capacity growth."""
@@ -1171,6 +1262,12 @@ class BrokerStats:
     # Counts repeat on capacity-overflow retries (honest work accounting).
     distinct_interests: int = 0
     fanout_copies: int = 0
+    # unified sequence clock after this call (journal seq when journaling:
+    # ingests, subscribes, and committed fires each consume one tick)
+    seq: int = 0
+    # fires this call that fell back to the per-interest seed path after
+    # the bounded overflow-retry ceiling (degraded, still bit-identical)
+    degraded_fires: int = 0
 
 
 @dataclasses.dataclass
@@ -1303,6 +1400,9 @@ class Broker:
         placement: CohortPlacement | None = None,
         shard_cohorts: bool = False,
         decay_patience: int = 2,
+        journal: ChangesetJournal | None = None,
+        channel=None,
+        max_fire_retries: int = 8,
     ):
         self.dictionary = dictionary if dictionary is not None else Dictionary()
         self.matcher = matcher
@@ -1378,7 +1478,22 @@ class Broker:
         self._refine_dev: Optional[Tuple[jax.Array, jax.Array]] = None
         self._bank_version = -1
         self._batches: Dict[int, ChangesetBatch] = {}
-        self._counter = 0
+        # durability tier (module docstring, layer 6): one monotonic
+        # sequence clock shared by stats, frontiers, and the journal —
+        # subscribe/unsubscribe/ingest/committed-fire each consume a tick
+        # whether or not a journal is attached, so journal-on and
+        # journal-off brokers assign identical ids
+        self.journal = journal
+        self.channel = channel
+        self.max_fire_retries = max_fire_retries
+        self._seq = journal.last_seq if journal is not None else 0
+        self._last_cid = 0  # seq of the last ingested changeset
+        self._jid_next = 0  # durable subscriber ids (journaled)
+        self._last_snapshot_seq = 0
+        self._snapshot_keep_from = 1  # compaction floor (advanced by snapshot)
+        self._replaying = False  # recovery replay: suppress journal/delivery
+        self.degraded_fires = 0  # cumulative seed-path fallback fires
+        self._degraded_acc = 0
         self._rejit_acc = 0.0
         self.rejit_count = 0  # executable compiles (cohort + bank words)
         self.cohort_compiles: Dict[tuple, int] = {}  # per cohort key
@@ -1399,6 +1514,8 @@ class Broker:
         initial_target: np.ndarray | None = None,
         policy: PushPolicy | None = None,
         share_target: bool = False,
+        transport: Optional[Callable] = None,
+        _jid: int | None = None,
     ) -> BrokerSubscription:
         """Register an interest; only its own cohort will (re)compile.
 
@@ -1425,11 +1542,38 @@ class Broker:
                 "shard_cohorts=True requires caps.dedup_candidates == 0 "
                 "(see make_sharded_cohort_step)"
             )
+        # WAL discipline: consume one sequence tick and journal the call's
+        # raw arguments *before* mutating broker state, so the durable
+        # prefix at any boundary is replayable (replay re-runs this method
+        # with the recorded args and lands on identical state)
+        jid = self._jid_next if _jid is None else _jid
+        self._seq += 1
+        if self.journal is not None and not self._replaying:
+            arrays = {}
+            if initial_target is not None and np.asarray(initial_target).size:
+                arrays["initial_target"] = np.asarray(
+                    initial_target, np.int32
+                )
+            self.journal.append(
+                "subscribe",
+                meta={
+                    "jid": jid,
+                    "expr": _expr_to_json(expr),
+                    "caps": _caps_to_json(caps),
+                    "policy": _policy_to_json(policy),
+                    "share_target": bool(share_target),
+                },
+                arrays=arrays,
+                seq=self._seq,
+            )
+        self._jid_next = max(self._jid_next, jid + 1)
         canon_key = None
         if self.subsume_interests:
             expr, canon_key = canonicalize_expr(expr)
         sub = BrokerSubscription(expr, self.dictionary, caps, policy=policy)
-        sub.since = self._counter + 1
+        sub.jid = jid
+        sub.transport = transport
+        sub.since = self._seq + 1
         root = self._find_share_root(sub) if share_target else None
         if root is not None:
             sub.tau, sub.rho = root.tau, root.rho
@@ -1470,12 +1614,24 @@ class Broker:
         if (
             root is None
             or root.caps != sub.caps  # root may have outgrown the signature
-            or root.since != sub.since
+            or not self._frontier_equal(root.since, sub.since)
             or not _stores_equal(root.tau, sub.tau)
             or not _stores_equal(root.rho, sub.rho)
         ):
             return None
         return root
+
+    def _frontier_equal(self, a: int, b: int) -> bool:
+        """Do two consumption frontiers denote the same pending suffix?
+
+        Exactly equal frontiers trivially do. Beyond that, the unified
+        sequence clock assigns non-changeset events (subscribes, fires)
+        their own ticks, so two frontiers that both point past the last
+        ingested changeset have *empty* pending suffixes and are
+        equivalent — the next ingest re-keys both onto its cid
+        (see :meth:`_apply_ingest`).
+        """
+        return a == b or min(a, b) > self._last_cid
 
     def _find_share_root(
         self, sub: BrokerSubscription
@@ -1492,6 +1648,13 @@ class Broker:
 
     def unsubscribe(self, sub: BrokerSubscription) -> None:
         """Remove one subscription; unrelated cohorts keep their executables."""
+        self._seq += 1
+        if self.journal is not None and not self._replaying:
+            self.journal.append(
+                "unsubscribe", meta={"jid": sub.jid}, seq=self._seq
+            )
+        if self.channel is not None:
+            self.channel.forget(sub)
         self.subs.remove(sub)
         self.bank.remove_plan(sub.lanes)
         sub.lanes = ()
@@ -1631,20 +1794,31 @@ class Broker:
         untouched — an empty changeset propagates nothing).
         """
         removed, added = _as_rows(removed), _as_rows(added)
-        self._counter += 1
-        cid = self._counter
+        if self.channel is not None and not self._replaying:
+            # backpressure: pump due retries first, and block (on the
+            # channel's injected clock) while the in-flight retry queue is
+            # over its bound — each pumped retry either acks or progresses
+            # toward quarantine, both of which shrink the queue
+            self._service_channel()
+        self._seq += 1
+        cid = self._seq
+        if self.journal is not None and not self._replaying:
+            # write-ahead: the changeset is durable before any batch sees it
+            self.journal.append(
+                "ingest",
+                arrays={"removed": removed, "added": added},
+                seq=cid,
+            )
         if not self.subs:
+            self._last_cid = cid
             return []
         t0 = time.perf_counter()
         self._rejit_acc = 0.0
         self._rows_matched_acc = self._rows_distinct_acc = 0
         self._distinct_acc = self._fanout_acc = 0
+        self._degraded_acc = 0
 
-        # layer 4: accumulate pending batches per consumption frontier
-        for batch in self._batches.values():
-            batch.extend(removed, added, cid)
-        if cid not in self._batches and any(s.since == cid for s in self.subs):
-            self._batches[cid] = ChangesetBatch.fresh(removed, added, cid)
+        self._apply_ingest(removed, added, cid)
 
         now = time.perf_counter()
         fired = []
@@ -1653,6 +1827,8 @@ class Broker:
             if batch is not None and s.policy.fires(
                 batch.n_changesets, now - s.last_push_t
             ):
+                if self.channel is not None and not self.channel.eligible(s):
+                    continue  # quarantined / backing off: frontier pins
                 fired.append(k)
         results, n_passes = self._fire(fired)
         self._sweep_batches(drained=bool(fired))
@@ -1660,6 +1836,54 @@ class Broker:
             cid, removed, added, results, fired, n_passes, t0
         )
         return results
+
+    def _apply_ingest(
+        self, removed: np.ndarray, added: np.ndarray, cid: int
+    ) -> None:
+        """Layer 4: accumulate one changeset into every pending frontier.
+
+        The unified clock makes changeset ids non-contiguous (subscribe and
+        fire events consume ticks too), so a frontier pointing at a
+        non-changeset seq — a fresh subscription, or a fully-drained
+        subscriber — *re-keys* onto the first changeset that actually
+        arrives: any subscriber with ``since <= cid`` and no pending batch
+        provably has an empty pending suffix (every ingested changeset
+        with id >= its frontier is in a batch it references), so adopting
+        ``since = cid`` is the identity on its pending window.
+        """
+        for batch in self._batches.values():
+            batch.extend(removed, added, cid)
+        waiting = [
+            s
+            for s in self.subs
+            if s.since not in self._batches and s.since <= cid
+        ]
+        if waiting:
+            self._batches[cid] = ChangesetBatch.fresh(removed, added, cid)
+            for s in waiting:
+                s.since = cid
+        self._last_cid = cid
+
+    def _service_channel(self) -> None:
+        """Pump due delivery retries; block while the retry queue is full.
+
+        Called on the ingest path before consuming a sequence tick. Every
+        flush of due subscribers either acks them (clearing their pending
+        state) or fails them one step closer to quarantine, so the
+        backpressure loop strictly drains and terminates.
+        """
+        ch = self.channel
+        due = [s for s in self.subs if ch.retry_due(s)]
+        if due:
+            self.flush(due)
+        if ch.max_in_flight is None:
+            return
+        while ch.in_flight() >= ch.max_in_flight:
+            ch.wait_for_retry()
+            due = [s for s in self.subs if ch.retry_due(s)]
+            if not due:
+                break
+            self.flush(due)
 
     def flush(
         self, subs: Sequence[BrokerSubscription] | None = None
@@ -1685,13 +1909,20 @@ class Broker:
         self._rejit_acc = 0.0
         self._rows_matched_acc = self._rows_distinct_acc = 0
         self._distinct_acc = self._fanout_acc = 0
+        self._degraded_acc = 0
         fired = [k for k in targets if self.subs[k].since in self._batches]
+        if self.channel is not None and not self._replaying:
+            fired = [
+                k for k in fired if self.channel.eligible(self.subs[k])
+            ]
         results, n_passes = self._fire(fired)
         self._sweep_batches(drained=bool(fired))
         if fired:
+            # the committed fire consumed its own sequence tick (and
+            # journal record) inside _fire, so stats see the advanced clock
             z = np.zeros((0, 3), np.int32)
             self._record_stats(
-                self._counter, z, z, results, fired, n_passes, t0
+                self._seq, z, z, results, fired, n_passes, t0
             )
         return results
 
@@ -1728,21 +1959,63 @@ class Broker:
                     outs[k] = _empty_outputs(self.subs[k].caps)
                 continue
             fronts.append(self._frontier_input(groups[since], batch))
+        staged: Dict[int, Tuple[TripleStore, TripleStore]] = {}
         if not fronts:
             n_passes = 0
         elif self.deferred_device_resident:
             # all fired frontiers in one evaluation: same-shape cohorts
             # stack across frontiers into one batched executable call
-            o, n_passes = self._evaluate_frontiers(fronts)
+            o, staged, n_passes = self._evaluate_frontiers(fronts)
             outs.update(o)
         else:
             # PR 2 baseline: one sequential pass per frontier
             n_passes = 0
             for fr in fronts:
-                o, passes = self._evaluate_frontiers([fr])
+                o, st, passes = self._evaluate_frontiers([fr])
                 outs.update(o)
+                staged.update(st)
                 n_passes += passes
 
+        # delivery gate (module docstring, layer 6): outputs are handed to
+        # the channel BEFORE any state commits, so a failed delivery needs
+        # no rollback — the subscriber is simply not committed: its τ/ρ
+        # stay, its frontier pins, its batch keeps composing, and the next
+        # eligible fire re-delivers the composed window (idempotent for
+        # the receiver by Def-6 composition). Without a channel — and
+        # during recovery replay — every fired subscriber acks.
+        deliver = self.channel is not None and not self._replaying
+        acked: List[int] = []
+        for since in ordered:
+            for k in groups[since]:
+                if not deliver or self.channel.deliver(
+                    self.subs[k], outs[k]
+                ):
+                    acked.append(k)
+        if acked:
+            # commit point: the fire consumes one sequence tick, durably
+            # recording exactly the acked frontier advances; a crash
+            # before this append re-fires (at-least-once), a crash after
+            # it replays the evaluation without re-delivering
+            self._seq += 1
+            if self.journal is not None and not self._replaying:
+                self.journal.append(
+                    "fire",
+                    meta={
+                        "fires": [
+                            [
+                                self.subs[k].jid,
+                                self._batches[self.subs[k].since].last_id
+                                + 1,
+                            ]
+                            for k in acked
+                        ]
+                    },
+                    seq=self._seq,
+                )
+        acked_set = set(acked)
+        self._commit_staged(
+            {k: staged[k] for k in acked if k in staged}
+        )
         now = time.perf_counter()
         tag_refs: Dict[int, int] = {}
         for s in self.subs:
@@ -1750,6 +2023,8 @@ class Broker:
         for since in ordered:
             batch = self._batches[since]
             for k in groups[since]:
+                if k not in acked_set:
+                    continue
                 results[k] = outs[k]
                 s = self.subs[k]
                 s.since = batch.last_id + 1
@@ -1897,8 +2172,18 @@ class Broker:
 
     def _evaluate_frontiers(
         self, fronts: List[_FrontierInput]
-    ) -> Tuple[Dict[int, EvalOutputs], int]:
-        """All fired frontiers through every due cohort; atomic commit.
+    ) -> Tuple[
+        Dict[int, EvalOutputs],
+        Dict[int, Tuple[TripleStore, TripleStore]],
+        int,
+    ]:
+        """All fired frontiers through every due cohort; staged results.
+
+        Returns ``(outs, staged, n_passes)``: per-subscriber outputs, the
+        staged (τ', ρ') updates, and the executable pass count. Nothing is
+        committed here — :meth:`_fire` commits the staged state only for
+        subscribers whose delivery acked (:meth:`_commit_staged`), which is
+        what makes a failed delivery rollback-free.
 
         The frontier axis is folded into each cohort's member axis: one
         stacked bank pass covers every frontier's deleted side, and each
@@ -1932,6 +2217,8 @@ class Broker:
             and all(fr.d_native is not None for fr in fronts)
         )
         n_passes = 0  # counts abandoned overflow-retry attempts too
+        n_retries = 0  # whole-fire overflow re-runs (bounded ceiling)
+        front_of = {k: fr for fr in fronts for k in fr.idxs}
         while True:
             for fr in fronts:
                 for k in fr.idxs:  # host-side capacity guard
@@ -2375,43 +2662,333 @@ class Broker:
                         staged[k] = (tau1_c[pos0], rho1_c[pos0])
 
             if overflowed:
+                n_retries += 1
+                if n_retries > self.max_fire_retries:
+                    # bounded degradation: past the ceiling, evaluate the
+                    # still-overflowing subscribers through the seed
+                    # per-interest path (bit-identical by the oracle
+                    # discipline; it doubles only the one subscriber's
+                    # caps) instead of re-running the whole multi-frontier
+                    # fire while capacities grow without limit
+                    degraded = sorted(set(overflowed))
+                    for k in degraded:
+                        tau1, rho1, out = self._degraded_eval(
+                            k, front_of[k], mkey
+                        )
+                        outs[k] = out
+                        staged[k] = (tau1, rho1)
+                        n_passes += 1
+                    self.degraded_fires += len(degraded)
+                    self._degraded_acc += len(degraded)
+                    return outs, staged, n_passes
                 # grow only the subscribers that overflowed, then re-run the
                 # whole fire (staged updates are discarded: atomic commit)
                 for k in sorted(set(overflowed)):
                     subs[k].recompile(subs[k].caps.doubled())
                 continue
-            # only the sharded path consults the τ-partition cache, and only
-            # an actually-changed replica should invalidate it — a fire
-            # whose changesets missed this interest commits a bit-identical
-            # τ, and re-partitioning it would waste the exact host round
-            # trip the cache exists to amortize. Comparisons memoize on the
-            # (old, new) array pair, so a shared-τ group syncs once.
-            unchanged_cache: Dict[Tuple[int, int], bool] = {}
-            for k, (tau1, rho1) in staged.items():
-                s = subs[k]
-                unchanged = False
-                if sharded:
-                    pair = (id(s.tau.spo), id(tau1.spo))
-                    unchanged = unchanged_cache.get(pair)
-                    if unchanged is None:
-                        unchanged = s.tau.spo.shape == tau1.spo.shape and bool(
-                            jnp.all(s.tau.spo == tau1.spo)
+            return outs, staged, n_passes
+
+    def _degraded_eval(
+        self, k: int, fr: _FrontierInput, mkey
+    ) -> Tuple[TripleStore, TripleStore, EvalOutputs]:
+        """Seed-path fallback for one subscriber whose cohort fire kept
+        overflowing past ``max_fire_retries``: the per-interest
+        :func:`~repro.core.propagation.make_interest_step` evaluation of
+        its composed frontier, doubling only its own capacities until the
+        outputs fit. Outputs and staged state are bit-identical to the
+        cohort path (the same oracle every broker layer is pinned
+        against); only throughput degrades."""
+        s = self.subs[k]
+        while fr.d_rows > s.caps.n_removed or fr.a_rows > s.caps.n_added:
+            s.recompile(s.caps.doubled())
+        if self.dictionary.id_capacity > s.id_capacity:
+            s.recompile()
+        for _ in range(64):
+            d = fr.d_store(s.caps.n_removed)
+            a = fr.a_store(s.caps.n_added)
+            key = ("seed", s.serial, s.plan_version, s.caps, mkey)
+            fn = self._build_exec(
+                key,
+                lambda: make_interest_step(
+                    s.plan,
+                    id_capacity=s.id_capacity,
+                    caps=s.caps,
+                    matcher=self.matcher,
+                ),
+                (d, a, s.tau, s.rho),
+            )
+            tau1, rho1, out = fn(d, a, s.tau, s.rho)
+            if not bool(out.overflow):
+                return tau1, rho1, out
+            s.recompile(s.caps.doubled())
+        raise RuntimeError(
+            "degraded seed-path fire failed to converge after 64 doublings"
+        )
+
+    def _commit_staged(
+        self, staged: Dict[int, Tuple[TripleStore, TripleStore]]
+    ) -> None:
+        """Commit staged (τ', ρ') for the acked subscribers.
+
+        Only the sharded path consults the τ-partition cache, and only
+        an actually-changed replica should invalidate it — a fire
+        whose changesets missed this interest commits a bit-identical
+        τ, and re-partitioning it would waste the exact host round
+        trip the cache exists to amortize. Comparisons memoize on the
+        (old, new) array pair, so a shared-τ group syncs once.
+        """
+        subs = self.subs
+        sharded = self.mesh is not None and self.shard_cohorts
+        unchanged_cache: Dict[Tuple[int, int], bool] = {}
+        for k, (tau1, rho1) in staged.items():
+            s = subs[k]
+            unchanged = False
+            if sharded:
+                pair = (id(s.tau.spo), id(tau1.spo))
+                unchanged = unchanged_cache.get(pair)
+                if unchanged is None:
+                    unchanged = s.tau.spo.shape == tau1.spo.shape and bool(
+                        jnp.all(s.tau.spo == tau1.spo)
+                    )
+                    unchanged_cache[pair] = unchanged
+            if not unchanged:
+                s.tau_version += 1
+            s.tau, s.rho = tau1, rho1
+        if staged:
+            # block on every cohort's output so elapsed_s covers all
+            # work; lane-group members alias one τ array, so block on
+            # each distinct array once, not per delivery
+            jax.block_until_ready(
+                list({
+                    id(tau1.spo): tau1.spo
+                    for tau1, _ in staged.values()
+                }.values())
+            )
+
+    # -- durability: snapshot / recovery / compaction -----------------------
+
+    def snapshot(self, store) -> int:
+        """Persist full broker state into a :class:`CheckpointStore`.
+
+        Keyed by the current journal sequence (atomic tmp-dir+rename, see
+        ``checkpoint/store.py``), so replay after a restore is bounded to
+        the journal tail past this seq — plus the pre-snapshot *ingest*
+        records still pending on some subscriber's consumption frontier,
+        which is exactly what :meth:`compact_journal` keeps. τ/ρ are saved
+        as canonical host row arrays (lex-sorted valid rows), so restoring
+        through ``from_array`` reproduces them bit for bit.
+        """
+        state = {
+            "subs": {
+                str(s.jid): {
+                    "tau": to_numpy(s.tau),
+                    "rho": to_numpy(s.rho),
+                }
+                for s in self.subs
+            }
+        }
+        extra = {
+            "seq": self._seq,
+            "jid_next": self._jid_next,
+            "last_cid": self._last_cid,
+            "subs": [
+                {
+                    "jid": s.jid,
+                    "expr": _expr_to_json(s.expr),
+                    "caps": _caps_to_json(s.caps),
+                    "policy": _policy_to_json(s.policy),
+                    "since": s.since,
+                }
+                for s in self.subs
+            ],
+        }
+        store.save(self._seq, state, extra)
+        self._last_snapshot_seq = self._seq
+        self._snapshot_keep_from = min(
+            [s.since for s in self.subs] + [self._seq + 1]
+        )
+        return self._seq
+
+    def compact_journal(self) -> int:
+        """Drop journal segments replay can never need; returns segments
+        removed. Safe exactly when a snapshot exists: replay needs (a)
+        records after the last snapshot and (b) ingest records at or after
+        the snapshot's oldest live consumption frontier — without a
+        snapshot everything from seq 1 is needed, so nothing is dropped.
+        """
+        if self.journal is None:
+            return 0
+        return self.journal.compact(self._snapshot_keep_from)
+
+    @classmethod
+    def recover(
+        cls,
+        journal: ChangesetJournal,
+        store=None,
+        dictionary: Dictionary | None = None,
+        **broker_kwargs,
+    ) -> "Broker":
+        """Rebuild a broker from its journal (+ optional snapshot store).
+
+        Picks the newest snapshot whose seq is <= the journal's durable
+        ``last_seq`` (a snapshot ahead of the durable prefix reflects
+        un-journaled state and is skipped), restores every subscription's
+        τ/ρ/frontier from it, then replays the journal tail: pre-snapshot
+        *ingest* records rebuild the pending :class:`ChangesetBatch`es
+        (self-gating — only changesets at or past a restored frontier
+        land in a batch), and post-snapshot records re-run their original
+        operations with journaling and delivery suppressed. Fires replay
+        exactly the recorded acked subscribers, so a delivery that failed
+        before the crash stays un-committed after recovery. The result is
+        bit-identical broker state: same τ/ρ rows, same frontiers, same
+        pending batches, same sequence clock.
+
+        ``dictionary`` must be the same dictionary the crashed broker
+        encoded with (term↔id growth happens in the caller and is not
+        journaled). Per-subscriber transports and channel retry state are
+        ephemeral — re-attach transports after recovery; quarantine is
+        re-earned. Lane-group/share lineage of *restored* subscriptions is
+        not reconstructed (a missed collapse only — values stay
+        bit-identical); subscriptions replayed from post-snapshot records
+        rebuild their lineage normally.
+        """
+        broker = cls(
+            dictionary=dictionary, journal=journal, **broker_kwargs
+        )
+        broker._seq = 0
+        snap_step = 0
+        extra: Dict = {}
+        if store is not None:
+            usable = [s for s in store.steps() if s <= journal.last_seq]
+            if usable:
+                snap_step = usable[-1]
+                arrays, extra = store.load_raw(snap_step)
+                broker._replaying = True
+                try:
+                    for meta in extra["subs"]:
+                        broker._restore_sub(meta, arrays)
+                finally:
+                    broker._replaying = False
+                broker._seq = int(extra["seq"])
+                broker._jid_next = int(extra["jid_next"])
+                broker._last_snapshot_seq = snap_step
+        min_since = min(
+            [s.since for s in broker.subs] + [snap_step + 1]
+        )
+        records = list(journal.records())
+        if records and records[0].seq > min(min_since, snap_step + 1):
+            raise RuntimeError(
+                f"journal starts at seq {records[0].seq} but replay needs "
+                f"seq {min(min_since, snap_step + 1)}: a needed segment "
+                "was compacted away or lost"
+            )
+        broker._replaying = True
+        try:
+            for rec in records:
+                if rec.seq <= snap_step:
+                    # pre-snapshot: only ingests still pending on some
+                    # restored frontier matter; everything else is already
+                    # reflected in the snapshot
+                    if rec.kind == "ingest" and rec.seq >= min_since:
+                        broker._apply_ingest(
+                            rec.arrays["removed"], rec.arrays["added"],
+                            rec.seq,
                         )
-                        unchanged_cache[pair] = unchanged
-                if not unchanged:
-                    s.tau_version += 1
-                s.tau, s.rho = tau1, rho1
-            if staged:
-                # block on every cohort's output so elapsed_s covers all
-                # work; lane-group members alias one τ array, so block on
-                # each distinct array once, not per delivery
-                jax.block_until_ready(
-                    list({
-                        id(tau1.spo): tau1.spo
-                        for tau1, _ in staged.values()
-                    }.values())
+                    continue
+                broker._seq = rec.seq - 1
+                if rec.kind == "ingest":
+                    broker._seq = rec.seq
+                    broker._apply_ingest(
+                        rec.arrays["removed"], rec.arrays["added"], rec.seq
+                    )
+                elif rec.kind == "subscribe":
+                    broker.subscribe(
+                        _expr_from_json(rec.meta["expr"]),
+                        caps=_caps_from_json(rec.meta["caps"]),
+                        initial_target=rec.arrays.get("initial_target"),
+                        policy=_policy_from_json(rec.meta["policy"]),
+                        share_target=bool(rec.meta["share_target"]),
+                        _jid=int(rec.meta["jid"]),
+                    )
+                elif rec.kind == "unsubscribe":
+                    broker.unsubscribe(
+                        broker._sub_by_jid(int(rec.meta["jid"]))
+                    )
+                elif rec.kind == "fire":
+                    broker._replay_fire(rec)
+                else:
+                    raise RuntimeError(
+                        f"unknown journal record kind {rec.kind!r}"
+                    )
+        finally:
+            broker._replaying = False
+        if extra:
+            broker._last_cid = max(
+                broker._last_cid, int(extra["last_cid"])
+            )
+        broker._seq = max(broker._seq, journal.last_seq)
+        broker._sweep_batches(drained=False)
+        return broker
+
+    def _restore_sub(self, meta: Dict, arrays: Dict) -> None:
+        """One snapshot subscription back to life (no journaling)."""
+        sub = BrokerSubscription(
+            _expr_from_json(meta["expr"]),
+            self.dictionary,
+            _caps_from_json(meta["caps"]),
+            policy=_policy_from_json(meta["policy"]),
+        )
+        sub.jid = int(meta["jid"])
+        sub.since = int(meta["since"])
+        prefix = f"subs/{sub.jid}/"
+        tau_rows = arrays[prefix + "tau"]
+        rho_rows = arrays[prefix + "rho"]
+        if tau_rows.size:
+            sub.tau, _ = from_array(
+                jnp.asarray(tau_rows, jnp.int32), sub.caps.tau
+            )
+        if rho_rows.size:
+            sub.rho, _ = from_array(
+                jnp.asarray(rho_rows, jnp.int32), sub.caps.rho
+            )
+        sub.lanes = self.bank.add_plan(sub.plan)
+        self.subs.append(sub)
+        self._lanes_raw += sub.plan.n_total
+
+    def _sub_by_jid(self, jid: int) -> BrokerSubscription:
+        for s in self.subs:
+            if s.jid == jid:
+                return s
+        raise RuntimeError(f"journal references unknown subscriber {jid}")
+
+    def _replay_fire(self, rec) -> None:
+        """Re-run one committed fire for exactly the recorded subscribers.
+
+        Re-evaluates the recorded frontiers (delivery suppressed — the
+        receivers already have these outputs; a re-send would be harmless
+        anyway, see the Def-6 idempotence contract in the module
+        docstring) and commits their staged τ/ρ and frontier advances.
+        The recorded ``new_since`` values double as an integrity check.
+        """
+        by_jid = {int(j): int(ns) for j, ns in rec.meta["fires"]}
+        ks = [
+            k for k, s in enumerate(self.subs) if s.jid in by_jid
+        ]
+        if len(ks) != len(by_jid):
+            missing = set(by_jid) - {self.subs[k].jid for k in ks}
+            raise RuntimeError(
+                f"fire record {rec.seq} references unknown "
+                f"subscribers {sorted(missing)}"
+            )
+        self._fire(ks)
+        for k in ks:
+            s = self.subs[k]
+            if s.since != by_jid[s.jid]:
+                raise RuntimeError(
+                    f"replayed fire {rec.seq} advanced subscriber "
+                    f"{s.jid} to {s.since}, journal recorded "
+                    f"{by_jid[s.jid]}"
                 )
-            return outs, n_passes
 
     # -- accounting ---------------------------------------------------------
 
@@ -2427,10 +3004,14 @@ class Broker:
     ) -> None:
         # fanned-out deliveries share one EvalOutputs per lane group: fetch
         # each distinct result once and weight by its member count, so stats
-        # stay O(distinct interests) host syncs per call
+        # stay O(distinct interests) host syncs per call. A fired subscriber
+        # whose delivery failed has no committed result (None): its work is
+        # counted when the retry eventually acks.
         uniq: Dict[int, Tuple[EvalOutputs, int]] = {}
         for k in fired:
             o = results[k]
+            if o is None:
+                continue
             ent = uniq.get(id(o))
             uniq[id(o)] = (o, 1 if ent is None else ent[1] + 1)
         self.stats.append(
@@ -2458,5 +3039,7 @@ class Broker:
                 rows_distinct=self._rows_distinct_acc,
                 distinct_interests=self._distinct_acc,
                 fanout_copies=self._fanout_acc,
+                seq=self._seq,
+                degraded_fires=self._degraded_acc,
             )
         )

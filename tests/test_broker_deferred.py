@@ -434,7 +434,7 @@ def test_flush_fast_paths_no_fire_and_empty_batches():
     assert broker.stats[-1].n_cohort_passes == 0
     assert broker.rejit_count == 0 and not broker._exec_cache
     assert not broker._batches
-    assert slow.since == eager.since == broker._counter + 1
+    assert slow.since == eager.since == broker._last_cid + 1
 
     # a real changeset afterwards still evaluates normally
     cs = (z, d.encode_triples([("e:1", "p:goals", "77")]))
